@@ -1,0 +1,30 @@
+"""Paper Figure 3: memory vs batch size per clipping algorithm (CNN)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import MODES_BENCH, SmallCNN, cnn_batch, compiled_memory_bytes
+from repro.core.clipping import ClipConfig, dp_value_and_clipped_grad
+
+
+def run(fast: bool = False) -> list[tuple[str, float, str]]:
+    model = SmallCNN(width=16)
+    params = model.init(jax.random.PRNGKey(0))
+    batches = [16, 64] if fast else [16, 64, 256]
+    rows = []
+    for mode in MODES_BENCH:
+        fn = dp_value_and_clipped_grad(model.loss_with_ctx, ClipConfig(mode=mode))
+        pts = []
+        for b in batches:
+            bd = cnn_batch(b, image=16)
+            specs = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), (params, bd)
+            )
+            pts.append(f"{b}:{compiled_memory_bytes(fn, *specs)/1e6:.1f}MB")
+        rows.append((f"fig3_memcurve_{mode}", 0.0, ";".join(pts)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,83 @@
+"""§Roofline: aggregate the dry-run artifacts into the roofline tables.
+
+Reads results/dryrun/{single,multi}/*.json (optimized) and
+results/dryrun_baseline/ (paper-faithful pre-optimization) and emits, per
+(arch x shape x mesh): the three roofline terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/total, memory fit, and the baseline->optimized delta
+on the dominant term.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path("results/dryrun")
+BASELINE = pathlib.Path("results/dryrun_baseline")
+HBM_BUDGET = 16e9  # v5e chip
+
+
+def load_cells(root: pathlib.Path, mesh_dir: str) -> dict[tuple, dict]:
+    d = root / mesh_dir
+    if not d.exists():
+        return {}
+    out = {}
+    for p in sorted(d.glob("*.json")):
+        m = json.loads(p.read_text())
+        out[(m.get("arch"), m.get("shape"))] = m
+    return out
+
+
+def _dom(r: dict) -> float:
+    return max(r["compute_s"], r["memory_s"], r["collective_s"])
+
+
+def fmt_row(m: dict, base: dict | None) -> str:
+    if m["status"] == "skipped":
+        return (f"| {m['arch']} | {m['shape']} | skipped | | | | | | "
+                f"{m.get('reason','')[:48]} |")
+    if m["status"] != "ok":
+        return (f"| {m['arch']} | {m['shape']} | ERROR | | | | | | "
+                f"{m.get('error','')[:48]} |")
+    r = {k: (max(v, 0.0) if isinstance(v, float) else v)
+         for k, v in m["roofline"].items()}
+    peak = r["memory_stats"]["peak_bytes_estimate"]
+    fits = "yes" if peak <= HBM_BUDGET else f"NO ({peak/1e9:.0f}GB)"
+    delta = ""
+    if base and base.get("status") == "ok":
+        b = base["roofline"]
+        if _dom(r) > 0:
+            delta = f"{_dom(b)/_dom(r):.1f}x"
+    return (
+        f"| {m['arch']} | {m['shape']} | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+        f"| {r['collective_s']:.3f} | **{r['bottleneck']}** "
+        f"| {r['useful_flops_ratio']:.2f} | {fits} | {delta} |"
+    )
+
+
+def run(mesh_dir: str = "single") -> list[tuple[str, float, str]]:
+    cells = load_cells(RESULTS, mesh_dir)
+    base = load_cells(BASELINE, mesh_dir)
+    rows = []
+    print(f"\n## Roofline ({mesh_dir}-pod mesh) — optimized; last column = "
+          "dominant-term speedup vs paper-faithful baseline")
+    print("| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+          "| useful/total | fits 16GB | vs baseline |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for key, m in sorted(cells.items()):
+        print(fmt_row(m, base.get(key)))
+        if m["status"] == "ok":
+            r = m["roofline"]
+            rows.append(
+                (f"roofline_{mesh_dir}_{m['arch']}_{m['shape']}", _dom(r) * 1e6,
+                 f"bottleneck={r['bottleneck']};useful_ratio={r['useful_flops_ratio']:.3f}")
+            )
+        else:
+            rows.append(
+                (f"roofline_{mesh_dir}_{m['arch']}_{m['shape']}", 0.0, m["status"])
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    run("single")
+    run("multi")

@@ -1,0 +1,60 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure + the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table4,table7] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list of benchmark names")
+    ap.add_argument("--fast", action="store_true", help="smaller sweeps")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig3_memory_curve,
+        roofline,
+        table1_complexity,
+        table3_decision,
+        table4_time_memory,
+        table5_accuracy,
+        table7_max_batch,
+    )
+
+    benches = {
+        "table1": lambda: table1_complexity.run(),
+        "table3": lambda: table3_decision.run(),
+        "table4": lambda: table4_time_memory.run(batch=32 if args.fast else 64),
+        "table5": lambda: table5_accuracy.run(steps=10 if args.fast else 30),
+        "table7": lambda: table7_max_batch.run(),
+        "fig3": lambda: fig3_memory_curve.run(fast=args.fast),
+        "roofline": lambda: roofline.run("single") + roofline.run("multi"),
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        t0 = time.time()
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.0,FAILED", file=sys.stderr)
+            traceback.print_exc()
+        print(f"# {name} finished in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Table 1/2: module complexities + measured validation.
+
+Prints the analytic model for a representative conv layer and validates the
+*ratio* structure empirically: ghost-norm time scales ~T^2, instantiation
+~D*p — measured on CPU with the chunked ops.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import time_fn
+from repro.core.decision import algorithm_cost, back_propagation, ghost_norm, grad_instantiation, weighted_grad
+from repro.core.taps import TapMeta
+from repro.kernels.ghost_norm import ops as gops
+
+import jax.numpy as jnp
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    b, t, d, p = 8, 28 * 28, 256 * 9, 512  # VGG conv5-like
+    rows.append(("table1_backprop", 0.0, f"time={back_propagation(b,t,d,p).time:.3e}"))
+    rows.append(("table1_ghostnorm", 0.0,
+                 f"time={ghost_norm(b,t,d,p).time:.3e};space={ghost_norm(b,t,d,p).space:.3e}"))
+    rows.append(("table1_instantiation", 0.0,
+                 f"time={grad_instantiation(b,t,d,p).time:.3e};space={grad_instantiation(b,t,d,p).space:.3e}"))
+    rows.append(("table1_weightedgrad", 0.0, f"time={weighted_grad(b,t,d,p).time:.3e}"))
+
+    # empirical scaling check (T doubles -> ghost ~4x, instantiation ~2x)
+    key = jax.random.PRNGKey(0)
+    for tt in (256, 512):
+        a = jax.random.normal(key, (4, tt, 64))
+        g = jax.random.normal(key, (4, tt, 48))
+        gh = jax.jit(lambda a, g: gops.ghost_norm_sq(a, g, block=128))
+        inst = jax.jit(lambda a, g: gops.instantiated_norm_sq(a, g))
+        rows.append((f"table1_measured_ghost_T{tt}", time_fn(gh, a, g) * 1e6, ""))
+        rows.append((f"table1_measured_inst_T{tt}", time_fn(inst, a, g) * 1e6, ""))
+
+    # Table 2: whole-algorithm costs for the same layer
+    meta = TapMeta(kind="matmul", T=t, D=d, p=p, s_shape=(b, t, p),
+                   s_dtype=jnp.float32, param_path="w", batch_size=b)
+    for mode in ("non_private", "opacus", "ghost", "fastgradclip", "mixed_ghost", "bk_mixed"):
+        c = algorithm_cost({"l": meta}, mode)
+        rows.append((f"table2_{mode}", 0.0,
+                     f"time={c['time']:.3e};space={c['space']:.3e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

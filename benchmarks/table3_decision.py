@@ -1,0 +1,43 @@
+"""Paper Table 3: VGG-11 / ImageNet layerwise ghost-vs-instantiate decision."""
+from __future__ import annotations
+
+from repro.core.decision import ghost_is_cheaper
+
+VGG11_LAYERS = [
+    ("conv1", 224 * 224, 3, 64, 3),
+    ("conv2", 112 * 112, 64, 128, 3),
+    ("conv3", 56 * 56, 128, 256, 3),
+    ("conv4", 56 * 56, 256, 256, 3),
+    ("conv5", 28 * 28, 256, 512, 3),
+    ("conv6", 28 * 28, 512, 512, 3),
+    ("conv7", 14 * 14, 512, 512, 3),
+    ("conv8", 14 * 14, 512, 512, 3),
+    ("fc9", 1, 512 * 7 * 7, 4096, 1),
+    ("fc10", 1, 4096, 4096, 1),
+    ("fc11", 1, 4096, 1000, 1),
+]
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    ghost_total = nonghost_total = mixed_total = 0.0
+    for name, t, d, p, k in VGG11_LAYERS:
+        ghost_cost = 2.0 * t * t
+        nong = float(p * d * k * k)
+        pick = "ghost" if ghost_is_cheaper(t, d * k * k, p) else "instantiate"
+        ghost_total += ghost_cost
+        nonghost_total += nong
+        mixed_total += min(ghost_cost, nong)
+        rows.append(
+            (f"table3_{name}", 0.0,
+             f"ghost={ghost_cost:.2e};nonghost={nong:.2e};selected={pick}")
+        )
+    rows.append(("table3_total", 0.0,
+                 f"ghost={ghost_total:.2e};nonghost={nonghost_total:.2e};"
+                 f"mixed={mixed_total:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

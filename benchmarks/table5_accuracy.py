@@ -1,0 +1,87 @@
+"""Paper Table 5 / Sec 2.1 claim: the efficient implementation does not change
+the mathematics — DP training curves are identical across clipping modes, and
+DP training actually learns.
+
+We train the small CNN on class-conditional synthetic data with DP-Adam under
+(a) vmap (Opacus analogue) and (b) mixed ghost clipping, same seeds/noise:
+the loss trajectories must match to float tolerance, and accuracy must beat
+chance by a wide margin.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import SmallCNN, cnn_batch
+from repro.core.clipping import ClipConfig, dp_value_and_clipped_grad
+from repro.core.noise import add_dp_noise
+from repro.core.taps import Ctx
+from repro.optim import adam, apply_updates
+
+
+def train(mode: str, steps: int = 30, batch: int = 64, lr: float = 5e-3,
+          sigma: float = 0.4, clip: float = 4.0):
+    model = SmallCNN(width=16)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adam()
+    opt_state = opt.init(params)
+    grad_fn = jax.jit(
+        dp_value_and_clipped_grad(model.loss_with_ctx, ClipConfig(mode=mode, clip_norm=clip))
+    )
+
+    @jax.jit
+    def update(params, opt_state, batch_data, key, step):
+        loss, gsum, _ = grad_fn(params, batch_data)
+        noisy = add_dp_noise(gsum, key, sigma * clip)
+        grads = jax.tree_util.tree_map(lambda g: g / batch, noisy)
+        upd, opt_state = opt.update(grads, opt_state, params, step, lr)
+        return apply_updates(params, upd), opt_state, loss
+
+    losses = []
+    for step in range(steps):
+        bd = cnn_batch(batch, image=16, step=step)
+        key = jax.random.fold_in(jax.random.PRNGKey(99), step)
+        params, opt_state, loss = update(params, opt_state, bd, key, jnp.asarray(step))
+        losses.append(float(loss))
+
+    # eval accuracy on held-out steps
+    correct = total = 0
+    for step in range(1000, 1005):
+        bd = cnn_batch(64, image=16, step=step)
+        h = model.loss_with_ctx  # reuse trunk via logits path
+        logits_fn = jax.jit(lambda p, b: _logits(model, p, b))
+        pred = jnp.argmax(logits_fn(params, bd), axis=-1)
+        correct += int(jnp.sum(pred == bd["label"]))
+        total += int(bd["label"].shape[0])
+    return losses, correct / total
+
+
+def _logits(model, params, batch):
+    import jax.nn as jnn
+
+    from repro.nn.conv import global_avg_pool
+
+    ctx = Ctx.disabled()
+    h = jnn.relu(model.g1(params["g1"], model.c1(params["c1"], batch["image"], ctx), ctx))
+    h = jnn.relu(model.g2(params["g2"], model.c2(params["c2"], h, ctx), ctx))
+    h = model.c3(params["c3"], h, ctx)
+    h = global_avg_pool(h)
+    return model.head(params["head"], h[:, None, :], ctx)[:, 0]
+
+
+def run(steps: int = 30) -> list[tuple[str, float, str]]:
+    losses_vmap, acc_vmap = train("vmap", steps)
+    losses_mixed, acc_mixed = train("mixed_ghost", steps)
+    max_diff = max(abs(a - b) for a, b in zip(losses_vmap, losses_mixed))
+    learned = losses_mixed[-1] < losses_mixed[0] - 0.1
+    return [
+        ("table5_parity_maxlossdiff", 0.0, f"{max_diff:.2e}"),
+        ("table5_acc_vmap", 0.0, f"{acc_vmap:.3f}"),
+        ("table5_acc_mixed", 0.0, f"{acc_mixed:.3f}"),
+        ("table5_dp_learns", 0.0, str(bool(learned))),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

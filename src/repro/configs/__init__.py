@@ -1,0 +1,3 @@
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES"]

@@ -1,0 +1,37 @@
+"""Paper-native configs: the models from the paper's own tables.
+
+vgg11/vgg19 + resnet18 (CIFAR) exercise the 2D-conv layerwise decision
+(Tables 3/4/6); vit_base / beit_large are the convolutional-ViT DP SOTA
+models of Table 5.
+"""
+from repro.configs.base import ArchConfig
+
+VIT_BASE = ArchConfig(
+    name="vit-base-patch16",
+    family="vit",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv=12,
+    d_ff=3072,
+    vocab=0,
+    norm="layernorm",
+    act="gelu",
+    qkv_bias=True,
+    source="arXiv:2010.11929",
+)
+
+BEIT_LARGE = ArchConfig(
+    name="beit-large-patch16",
+    family="vit",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv=16,
+    d_ff=4096,
+    vocab=0,
+    norm="layernorm",
+    act="gelu",
+    qkv_bias=True,
+    source="arXiv:2106.08254 (BEiT); paper Table 5",
+)

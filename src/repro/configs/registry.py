@@ -1,0 +1,68 @@
+"""Architecture registry: ``--arch <id>`` resolution and model construction."""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.configs import (
+    arctic_480b,
+    codeqwen1_5_7b,
+    jamba_1_5_large,
+    mixtral_8x7b,
+    phi_3_vision,
+    qwen1_5_32b,
+    qwen2_72b,
+    whisper_large_v3,
+    xlstm_350m,
+    yi_6b,
+)
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c
+    for c in (
+        xlstm_350m.CONFIG,
+        codeqwen1_5_7b.CONFIG,
+        qwen2_72b.CONFIG,
+        yi_6b.CONFIG,
+        qwen1_5_32b.CONFIG,
+        mixtral_8x7b.CONFIG,
+        arctic_480b.CONFIG,
+        jamba_1_5_large.CONFIG,
+        whisper_large_v3.CONFIG,
+        phi_3_vision.CONFIG,
+    )
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    key = name.strip()
+    if key in ARCHS:
+        return ARCHS[key]
+    alt = key.replace("_", "-").replace(".", "-")
+    for k in ARCHS:
+        if k.replace(".", "-") == alt:
+            return ARCHS[k]
+    raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; have {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def build_model(cfg: ArchConfig) -> Any:
+    if cfg.family == "audio":
+        from repro.models.encdec import EncDecLM
+
+        return EncDecLM(cfg)
+    from repro.models.lm import DecoderLM
+
+    return DecoderLM(cfg)
+
+
+def all_cells():
+    """All 40 (arch x shape) cells with runnability flags."""
+    for arch in ARCHS.values():
+        for shape in SHAPES.values():
+            yield arch, shape, arch.supports(shape)

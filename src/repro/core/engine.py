@@ -1,0 +1,107 @@
+"""PrivacyEngine: the paper's Appendix-E API, adapted to functional JAX.
+
+PyTorch version:                          This framework:
+
+    engine = PrivacyEngine(model, ...)    engine = PrivacyEngine(loss_fn, ...)
+    engine.attach(optimizer)              grad_fn = engine.clipped_grad_fn()
+    optimizer.step(loss=loss)             loss, g, aux = grad_fn(params, batch)
+    optimizer.virtual_step(loss=loss)     g_sum += g   (gradient accumulation)
+                                          noisy = engine.privatize(g_sum, key)
+
+``privatize`` adds sigma*R*N(0, I) once per *logical* batch and divides by the
+logical batch size — exactly the paper's virtual-step semantics, which is what
+makes large-batch DP training (the regime where DP accuracy lives) affordable
+on fixed-memory hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accountant import RDPAccountant, compute_epsilon, find_noise_multiplier
+from repro.core.clipping import ClipConfig, dp_value_and_clipped_grad, discover_meta, validate_coverage
+from repro.core.noise import add_dp_noise
+
+
+@dataclasses.dataclass
+class PrivacyEngine:
+    loss_with_ctx: Callable  # (params, batch, ctx) -> (B,) per-sample losses
+    batch_size: int  # logical batch size (samples per optimizer step)
+    sample_size: int  # dataset size N
+    max_grad_norm: float  # clipping norm R
+    epochs: Optional[float] = None
+    steps: Optional[int] = None
+    target_epsilon: Optional[float] = None
+    target_delta: Optional[float] = None
+    noise_multiplier: Optional[float] = None
+    mode: str = "mixed_ghost"  # paper: 'ghost-mixed'
+    clip_fn: str = "abadi"
+    frozen_prefixes: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        self.sampling_rate = self.batch_size / self.sample_size
+        if self.steps is None:
+            if self.epochs is None:
+                raise ValueError("need epochs or steps")
+            self.steps = int(self.epochs * self.sample_size / self.batch_size)
+        if self.target_delta is None:
+            self.target_delta = 1.0 / (2 * self.sample_size)
+        if self.noise_multiplier is None:
+            if self.target_epsilon is None:
+                raise ValueError("need target_epsilon or noise_multiplier")
+            self.noise_multiplier = find_noise_multiplier(
+                target_epsilon=self.target_epsilon,
+                q=self.sampling_rate,
+                steps=self.steps,
+                delta=self.target_delta,
+            )
+        self.accountant = RDPAccountant()
+        self._clip_cfg = ClipConfig(
+            mode=self.mode,
+            clip_norm=self.max_grad_norm,
+            clip_fn=self.clip_fn,
+            frozen_prefixes=self.frozen_prefixes,
+        )
+
+    # -- validation -------------------------------------------------------
+    def validate(self, params: Any, batch: Any) -> None:
+        """Raise if any trainable parameter escapes per-sample clipping."""
+        meta = discover_meta(self.loss_with_ctx, params, batch)
+        missing = validate_coverage(meta, params, self.frozen_prefixes)
+        if missing:
+            raise ValueError(
+                "parameters not covered by per-sample clipping (freeze them or "
+                f"add taps): {missing[:10]}{'...' if len(missing) > 10 else ''}"
+            )
+
+    # -- the two halves of the mechanism ----------------------------------
+    def clipped_grad_fn(self) -> Callable:
+        """(params, batch) -> (mean_loss, sum_i C_i g_i, aux). jit/pjit-safe."""
+        return dp_value_and_clipped_grad(self.loss_with_ctx, self._clip_cfg)
+
+    def privatize(self, grad_sum: Any, key: jax.Array) -> Any:
+        """Add noise once per logical batch; normalize by batch size."""
+        std = self.noise_multiplier * self.max_grad_norm
+        noisy = add_dp_noise(grad_sum, key, std)
+        return jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) / self.batch_size).astype(g.dtype), noisy
+        )
+
+    # -- accounting --------------------------------------------------------
+    def record_step(self, n: int = 1) -> None:
+        self.accountant.step(q=self.sampling_rate, sigma=self.noise_multiplier, steps=n)
+
+    def privacy_spent(self, steps: Optional[int] = None) -> tuple[float, float]:
+        if steps is not None:
+            eps = compute_epsilon(
+                q=self.sampling_rate,
+                sigma=self.noise_multiplier,
+                steps=steps,
+                delta=self.target_delta,
+            )
+        else:
+            eps = self.accountant.get_epsilon(self.target_delta)
+        return eps, self.target_delta

@@ -1,0 +1,34 @@
+"""Clipping functions C(||g_i||; R) — any map bounded by R/||g_i|| (Eq. 2.1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def abadi_clip(norms: jax.Array, clip_norm: float) -> jax.Array:
+    """min(R/||g||, 1) — Abadi et al. 2016."""
+    return jnp.minimum(clip_norm / jnp.maximum(norms, 1e-12), 1.0)
+
+
+def global_clip(norms: jax.Array, clip_norm: float, z: float = 1.0) -> jax.Array:
+    """I(||g|| < Z) * R/Z — Bu et al. 2021 (global clipping)."""
+    return jnp.where(norms < z, clip_norm / z, 0.0)
+
+
+def automatic_clip(norms: jax.Array, clip_norm: float, gamma: float = 0.01) -> jax.Array:
+    """R/(||g|| + gamma) — automatic (normalized) clipping, Bu et al. 2022."""
+    return clip_norm / (norms + gamma)
+
+
+CLIP_FUNCTIONS = {
+    "abadi": abadi_clip,
+    "global": global_clip,
+    "automatic": automatic_clip,
+}
+
+
+def get_clip_fn(name: str):
+    try:
+        return CLIP_FUNCTIONS[name]
+    except KeyError:
+        raise ValueError(f"unknown clip function {name!r}; have {list(CLIP_FUNCTIONS)}")

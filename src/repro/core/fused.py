@@ -1,0 +1,74 @@
+"""Fused ghost-norm probes: per-sample norms computed INSIDE the backward pass.
+
+The tap mechanism (taps.py) exposes dL/ds as an explicit output — simple, but
+the stacked cotangents of every layer then coexist in HBM ((L, B, T, p) per
+tap: ~4 TB/device on qwen2-72b).  The paper's PyTorch hooks never have this
+problem: the norm is computed layer-by-layer during backprop and the gradient
+tensor dies immediately.
+
+This module restores that lifetime structure in JAX.  Each parameterized op
+routes its pre-activation through a ``custom_vjp`` identity *probe* carrying a
+dummy (B,) input z.  The probe's backward rule computes the layer's
+per-sample squared-norm contribution (ghost or instantiated, per the Eq. 4.1
+decision) from its residual ``a`` and the incoming cotangent ``g`` — and
+returns it as z's cotangent::
+
+    forward:   s -> s                      (identity; residual = a)
+    backward:  ds = g
+               da = 0                      (a's real grad flows via the matmul)
+               dz = ||dL_i/dW||^2  (B,)    <- the hijacked side channel
+
+``vjp(..., zs)`` then yields every layer's norms as (B,)-sized cotangents —
+inside ``lax.scan`` they stack to (L, B) — while g itself never leaves the
+backward scan.  Under the second pullback (cotangent C_i) the dz computation
+is dead code and XLA eliminates it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taps as taps_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeSpec:
+    """Static description of the norm computation for one tap."""
+
+    meta: "taps_mod.TapMeta"
+    branch_mode: str  # clipping mode used by decide()
+    decision_by: str = "space"
+    ghost_block: int = 512
+    inst_block_d: int = 8192
+
+
+def make_probe(spec: ProbeSpec):
+    from repro.core import ghost  # local import to avoid cycles
+
+    @jax.custom_vjp
+    def probe(s, a, z):
+        del a, z
+        return s
+
+    def fwd(s, a, z):
+        del z
+        return s, a
+
+    def bwd(a, g):
+        dz = ghost.tap_norm_sq(
+            spec.meta,
+            a,
+            g,
+            mode=spec.branch_mode,
+            decision_by=spec.decision_by,
+            ghost_block=spec.ghost_block,
+            inst_block_d=spec.inst_block_d,
+        )
+        da = jnp.zeros(a.shape, a.dtype) if a is not None else None
+        return g, da, dz
+
+    probe.defvjp(fwd, bwd)
+    return probe

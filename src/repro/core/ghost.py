@@ -1,0 +1,188 @@
+"""Per-tap per-sample gradient norms and (BK mode) weighted gradients.
+
+Given a tap's recorded activation ``a``, its cotangent ``g = dL/ds`` from the
+first backward pass, and the static ``TapMeta``, this module computes the
+per-sample squared gradient norm on the branch the layerwise decision picked
+(Alg. 1), and — for the book-keeping mode — the weighted gradient
+``sum_i C_i g_i`` directly as an einsum, skipping the second backward pass.
+
+Canonical layouts (stack dims folded into the row dim N):
+- matmul:     a (N, T, D), g (N, T, p); N = prod(stack) * B * G
+- embedding:  ids (N, T),  g (N, T, p)
+- scale:      a, g (N, T, p)          grad = sum_T g*a
+- bias:       g (N, T, p)             grad = sum_T g
+- dw_conv:    a (N, T, k, d), g (N, T, d)
+- scale_grouped: a, g (N, T, h*dh), param (h,)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decision import decide
+from repro.core.taps import TapMeta
+from repro.kernels.ghost_norm import ops as gops
+from repro.nn.conv import unfold2d
+
+
+def _fold(meta: TapMeta, x: jax.Array, trailing: tuple[int, ...]) -> jax.Array:
+    """Reshape (stack..., B, <middle>) -> (L, B*G?, ...) canonical row-major."""
+    lead = math.prod(meta.stack_dims) if meta.stack_dims else 1
+    return x.reshape((lead, meta.batch_size) + trailing)
+
+
+def _per_sample(meta: TapMeta, row_vals: jax.Array) -> jax.Array:
+    """(L*B*G,) row norms -> (B,) per-sample sums (over stack and groups)."""
+    lead = math.prod(meta.stack_dims) if meta.stack_dims else 1
+    v = row_vals.reshape(lead, meta.batch_size, max(meta.n_groups, 1))
+    return jnp.sum(v, axis=(0, 2))
+
+
+def _canonical_ag(meta: TapMeta, a: jax.Array, g: jax.Array):
+    """Return a (N, T, D), g (N, T, p) with N = L*B*G."""
+    lead = math.prod(meta.stack_dims) if meta.stack_dims else 1
+    gg = g.reshape(lead * meta.batch_size * max(meta.n_groups, 1), meta.T, meta.p)
+    if meta.conv is not None:
+        # a is raw (lead*B, H, W, d): unfold lazily to (N, T, D)
+        a4 = a.reshape((lead * meta.batch_size,) + a.shape[-3:])
+        aa = unfold2d(a4, meta.conv)
+    else:
+        aa = a.reshape(lead * meta.batch_size * max(meta.n_groups, 1), meta.T, meta.D)
+    return aa, gg
+
+
+def tap_norm_sq(
+    meta: TapMeta,
+    a: Optional[jax.Array],
+    g: jax.Array,
+    *,
+    mode: str = "mixed_ghost",
+    decision_by: str = "space",
+    ghost_block: int = 512,
+    inst_block_d: int = 8192,
+) -> jax.Array:
+    """Per-sample squared norm contributions: (B,) fp32 (weight + bias)."""
+    g = g.astype(jnp.float32)
+    total = jnp.zeros((meta.batch_size,), jnp.float32)
+
+    if meta.kind == "matmul":
+        branch = decide(meta, mode=mode, by=decision_by)
+        aa, gg = _canonical_ag(meta, a, g)
+        if branch == "ghost":
+            rows = gops.ghost_norm_sq(aa, gg, block=ghost_block)
+        else:
+            rows = gops.instantiated_norm_sq(aa, gg, block_d=inst_block_d)
+        total = total + _per_sample(meta, rows)
+    elif meta.kind == "embedding":
+        lead = math.prod(meta.stack_dims) if meta.stack_dims else 1
+        ids = a.reshape(lead * meta.batch_size, meta.T)
+        gg = g.reshape(lead * meta.batch_size, meta.T, meta.p)
+        rows = gops.embedding_ghost_norm_sq(ids, gg)
+        total = total + _per_sample(meta, rows)
+    elif meta.kind == "scale":
+        af = _fold(meta, a.astype(jnp.float32), (meta.T, meta.p))
+        gf = _fold(meta, g, (meta.T, meta.p))
+        grad = jnp.sum(gf * af, axis=-2)  # (L, B, p)
+        total = total + jnp.sum(grad * grad, axis=(0, 2))
+    elif meta.kind == "bias":
+        gf = _fold(meta, g, (meta.T, meta.p))
+        grad = jnp.sum(gf, axis=-2)
+        total = total + jnp.sum(grad * grad, axis=(0, 2))
+    elif meta.kind == "scale_grouped":
+        h, dh = meta.p, meta.D
+        af = _fold(meta, a.astype(jnp.float32), (meta.T, h, dh))
+        gf = _fold(meta, g, (meta.T, h, dh))
+        grad = jnp.einsum("lbthd,lbthd->lbh", gf, af)
+        total = total + jnp.sum(grad * grad, axis=(0, 2))
+    elif meta.kind == "dw_conv":
+        k = meta.D
+        af = _fold(meta, a.astype(jnp.float32), (meta.T, k, meta.p))
+        gf = _fold(meta, g, (meta.T, meta.p))
+        grad = jnp.einsum("lbtkd,lbtd->lbkd", af, gf)
+        total = total + jnp.sum(grad * grad, axis=(0, 2, 3))
+    else:
+        raise ValueError(f"unknown tap kind {meta.kind!r}")
+
+    if meta.bias_path is not None:
+        lead = math.prod(meta.stack_dims) if meta.stack_dims else 1
+        gf = g.reshape(lead, meta.batch_size, -1, meta.p)  # (L, B, G*T, p)
+        bias_grad = jnp.sum(gf, axis=2)  # (L, B, p)
+        total = total + jnp.sum(bias_grad * bias_grad, axis=(0, 2))
+    return total
+
+
+def tap_weighted_grads(
+    meta: TapMeta,
+    a: Optional[jax.Array],
+    g: jax.Array,
+    clip: jax.Array,  # (B,) clip factors C_i
+    param_shape: tuple[int, ...],
+) -> dict[str, jax.Array]:
+    """BK mode: weighted gradients sum_i C_i g_i as direct einsums.
+
+    Returns {param_path: grad, [bias_path: grad]} shaped like the params.
+    """
+    out: dict[str, jax.Array] = {}
+    lead = math.prod(meta.stack_dims) if meta.stack_dims else 1
+    gdim = max(meta.n_groups, 1)
+    cw = clip.astype(jnp.float32)
+
+    if meta.kind in ("matmul", "embedding", "scale", "bias"):
+        gw = g.astype(jnp.float32).reshape(lead, meta.batch_size, gdim, meta.T, meta.p)
+        gw = gw * cw[None, :, None, None, None]
+
+    if meta.kind == "matmul":
+        if a is None:
+            raise ValueError(f"matmul tap {meta.param_path} has no recorded activation")
+        if meta.conv is not None:
+            a4 = a.reshape((lead * meta.batch_size,) + a.shape[-3:])
+            aa = unfold2d(a4, meta.conv).reshape(
+                lead, meta.batch_size, gdim, meta.T, meta.D
+            )
+        else:
+            aa = a.reshape(lead, meta.batch_size, gdim, meta.T, meta.D)
+        w = jnp.einsum("lbgtd,lbgtp->lgdp", aa.astype(jnp.float32), gw)
+        if meta.conv is not None:
+            # unfold ordering is channel-major: (D=d*kh*kw, p) -> (d, kh, kw, p)
+            kh, kw = meta.conv.kernel
+            d_in = meta.D // (kh * kw)
+            w = w.reshape(lead, d_in, kh, kw, meta.p).transpose(0, 2, 3, 1, 4)
+            w = w.reshape(param_shape)
+        else:
+            w = w.reshape(param_shape)
+        out[meta.param_path] = w
+    elif meta.kind == "embedding":
+        ids = a.reshape(-1)
+        flat_g = gw.reshape(-1, meta.p)
+        w = jnp.zeros(param_shape, jnp.float32).at[ids].add(flat_g)
+        out[meta.param_path] = w
+    elif meta.kind == "scale":
+        af = a.astype(jnp.float32).reshape(lead, meta.batch_size, gdim, meta.T, meta.p)
+        out[meta.param_path] = jnp.einsum("lbgtp,lbgtp->lp", af, gw).reshape(param_shape)
+    elif meta.kind == "bias":
+        out[meta.param_path] = jnp.einsum("lbgtp->lp", gw).reshape(param_shape)
+    elif meta.kind == "scale_grouped":
+        h, dh = meta.p, meta.D
+        af = a.astype(jnp.float32).reshape(lead, meta.batch_size, meta.T, h, dh)
+        gg = g.astype(jnp.float32).reshape(lead, meta.batch_size, meta.T, h, dh)
+        gg = gg * cw[None, :, None, None, None]
+        out[meta.param_path] = jnp.einsum("lbthd,lbthd->lh", af, gg).reshape(param_shape)
+    elif meta.kind == "dw_conv":
+        k = meta.D
+        af = a.astype(jnp.float32).reshape(lead, meta.batch_size, meta.T, k, meta.p)
+        gg = g.astype(jnp.float32).reshape(lead, meta.batch_size, meta.T, meta.p)
+        gg = gg * cw[None, :, None, None]
+        out[meta.param_path] = jnp.einsum("lbtkd,lbtd->lkd", af, gg).reshape(param_shape)
+    else:
+        raise ValueError(f"unknown tap kind {meta.kind!r}")
+
+    if meta.bias_path is not None:
+        gb = g.astype(jnp.float32).reshape(lead, meta.batch_size, -1, meta.p)
+        gb = gb * cw[None, :, None, None]
+        out[meta.bias_path] = jnp.einsum("lbtp->lp", gb).reshape(
+            meta.stack_dims + (meta.p,) if meta.stack_dims else (meta.p,)
+        )
+    return out

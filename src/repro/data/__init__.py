@@ -1,0 +1,11 @@
+from repro.data.synthetic import SyntheticLMConfig, synthetic_lm_batch, synthetic_vision_batch
+from repro.data.poisson import poisson_sample_mask
+from repro.data.pipeline import DataPipeline
+
+__all__ = [
+    "SyntheticLMConfig",
+    "synthetic_lm_batch",
+    "synthetic_vision_batch",
+    "poisson_sample_mask",
+    "DataPipeline",
+]

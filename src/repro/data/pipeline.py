@@ -1,0 +1,76 @@
+"""Host-sharded data pipeline with background prefetch.
+
+Each host generates only its shard (process_index-keyed); a daemon thread
+keeps ``prefetch`` batches ahead of the training loop.  Because batches are a
+pure function of the step index, restart/elastic resume is a seek:
+``pipeline.seek(step)``.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+
+
+class DataPipeline:
+    def __init__(
+        self,
+        batch_fn: Callable[[int, int], dict],  # (step, shard) -> batch
+        *,
+        start_step: int = 0,
+        prefetch: int = 2,
+        shard: Optional[int] = None,
+    ):
+        self.batch_fn = batch_fn
+        self.shard = jax.process_index() if shard is None else shard
+        self._step = start_step
+        self._queue: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    def _worker(self):
+        while not self._stop.is_set():
+            with self._lock:
+                step = self._step
+                self._step += 1
+            batch = self.batch_fn(step, self.shard)
+            while not self._stop.is_set():
+                try:
+                    self._queue.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def start(self) -> "DataPipeline":
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+        return self
+
+    def seek(self, step: int) -> None:
+        """Restart the stream at ``step`` (restore / elastic resume)."""
+        self.stop()
+        with self._lock:
+            self._step = step
+        self._queue = queue.Queue(maxsize=self._queue.maxsize)
+        self._stop = threading.Event()
+        self._thread = None
+        self.start()
+
+    def __iter__(self) -> Iterator[tuple[int, dict]]:
+        self.start()
+        while True:
+            yield self._queue.get()
+
+    def next(self) -> tuple[int, dict]:
+        self.start()
+        return self._queue.get()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+            self._thread = None

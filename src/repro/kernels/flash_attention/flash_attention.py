@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: blocked online-softmax attention (forward).
+
+MXU-tiled FlashAttention-2 forward for the serving/prefill paths: the score
+matrix lives only as (block_q, block_kv) VMEM tiles; running (m, l, acc)
+statistics are VMEM scratch carried across the kv grid dimension.  Fully
+masked tiles (causal future, outside the sliding window) are skipped with
+``pl.when`` — the causal prefill does half the MXU work of the dense loop.
+
+The training path uses the custom-VJP XLA implementation in ``ops.py``
+(identical math, differentiable); ``ref.py`` is the oracle for both.
+
+Layout: q (B, H, Sq, hd), k/v (B, H, Skv, hd) — GQA callers broadcast KV
+heads (the wrapper in ops dispatches).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pad(x, axis, mult):
+    p = (-x.shape[axis]) % mult
+    if p == 0:
+        return x
+    w = [(0, 0)] * x.ndim
+    w[axis] = (0, p)
+    return jnp.pad(x, w)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_kv", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, H, Sq, hd)
+    k: jax.Array,  # (B, H, Skv, hd)
+    v: jax.Array,  # (B, H, Skv, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, hd = q.shape
+    skv = k.shape[2]
+    scale = hd**-0.5
+    in_dtype = q.dtype
+
+    q = _pad(q, 2, block_q)
+    k = _pad(k, 2, block_kv)
+    v = _pad(v, 2, block_kv)
+    sq_p, skv_p = q.shape[2], k.shape[2]
+    nq, nkv = sq_p // block_q, skv_p // block_kv
+
+    def q_index(bh, i, j):
+        return (bh // h, bh % h, i, 0)
+
+    def kv_index(bh, i, j):
+        return (bh // h, bh % h, j, 0)
+
+    def kernel(q_ref, k_ref, v_ref, o_ref, m_acc, l_acc, acc):
+        i = pl.program_id(1)
+        j = pl.program_id(2)
+
+        qpos0 = q_offset + i * block_q
+        kpos0 = j * block_kv
+        # tile-level skip: fully masked tiles do no work
+        live = jnp.asarray(True)
+        if causal:
+            live = jnp.logical_and(live, kpos0 <= qpos0 + block_q - 1)
+        if window is not None:
+            live = jnp.logical_and(
+                live, (qpos0 - (kpos0 + block_kv - 1)) < window
+            )
+
+        @pl.when(j == 0)
+        def _init():
+            m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+            l_acc[...] = jnp.zeros_like(l_acc)
+            acc[...] = jnp.zeros_like(acc)
+
+        @pl.when(live)
+        def _tile():
+            qf = q_ref[0, 0].astype(jnp.float32)
+            kf = k_ref[0, 0].astype(jnp.float32)
+            s = jax.lax.dot_general(
+                qf, kf, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            ) * scale  # (bq, bkv)
+            qpos = qpos0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = kpos0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            mask = kpos < skv  # padding
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= (qpos - kpos) < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m_acc[...], jnp.max(s, axis=1))
+            p = jnp.exp(s - m_new[:, None])
+            alpha = jnp.exp(m_acc[...] - m_new)
+            l_acc[...] = l_acc[...] * alpha + jnp.sum(p, axis=1)
+            acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+                p.astype(v_ref.dtype), v_ref[0, 0],
+                (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+            )
+            m_acc[...] = m_new
+
+        @pl.when(j == nkv - 1)
+        def _finalize():
+            denom = jnp.maximum(l_acc[...], 1e-30)
+            o_ref[0, 0] = (acc[...] / denom[:, None]).astype(o_ref.dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), q_index),
+            pl.BlockSpec((1, 1, block_kv, hd), kv_index),
+            pl.BlockSpec((1, 1, block_kv, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), q_index),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq_p, hd), in_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq, :]

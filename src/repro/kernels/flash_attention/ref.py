@@ -1,0 +1,66 @@
+"""Pure-jnp oracle for flash attention (naive, materializes scores)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_mask(
+    q_len: int,
+    kv_len: int,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Boolean (q_len, kv_len) mask; True = attend.
+
+    ``q_offset``: absolute position of q row 0 (decode: cache fill level).
+    ``window``: sliding-window size W — attend iff 0 <= i - j < W.
+    ``kv_valid_len``: scalar; positions >= it are padding (unfilled cache).
+    """
+    qi = q_offset + jnp.arange(q_len)[:, None]
+    kj = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+    if kv_valid_len is not None:
+        mask &= kj < kv_valid_len
+    return mask
+
+
+def mha_reference(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, K, hd)
+    v: jax.Array,  # (B, Skv, K, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Grouped-query attention, full-score reference. Returns (B, Sq, H, hd)."""
+    b, sq, h, hd = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    scale = scale if scale is not None else hd**-0.5
+    qf = q.astype(jnp.float32).reshape(b, sq, kheads, g, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) * scale
+    mask = attention_mask(
+        sq, k.shape[1], causal=causal, window=window, q_offset=q_offset,
+        kv_valid_len=kv_valid_len,
+    )
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, vf)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)

@@ -1,0 +1,121 @@
+"""Chunked per-sample gradient-norm ops (jit-ready wrappers).
+
+The ghost norm sum_{t,t'} (a_t . a_t')(g_t . g_t') is computed over (T x T)
+*tiles*: a pair of block Grams is formed in registers/VMEM, their elementwise
+product is reduced immediately, and the (T, T) matrices never exist in HBM.
+Symmetry halves the work: total = sum_i w_ii + 2 sum_{i<j} w_ij.
+
+The instantiate branch streams over fan-in blocks of the (D, p) per-sample
+gradient the same way.  On TPU the inner tile op is the Pallas kernel
+(``ghost_norm.py``); everywhere else these lax.scan versions lower to plain
+XLA and are used by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_DIRECT_T = 1024  # below this, a direct einsum beats the scan machinery
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def ghost_norm_sq(a: jax.Array, g: jax.Array, *, block: int = 512) -> jax.Array:
+    """Ghost norm (Eq. 2.7). a: (N, T, D), g: (N, T, p) -> (N,) fp32.
+
+    Inputs stay in their storage dtype; slices are upcast per tile — an
+    upfront fp32 copy of both operands would stay live through the whole
+    pair scan (9+ GB on qwen2-72b's lm_head tap).
+    """
+    n, t, _ = a.shape
+    if t <= max(block, _DIRECT_T):
+        af = a.astype(jnp.float32)
+        gf = g.astype(jnp.float32)
+        gram_a = jnp.einsum("ntd,nsd->nts", af, af)
+        gram_g = jnp.einsum("ntp,nsp->nts", gf, gf)
+        return jnp.einsum("nts,nts->n", gram_a, gram_g)
+
+    a = _pad_axis(a, 1, block)
+    g = _pad_axis(g, 1, block)
+    nb = a.shape[1] // block
+    ij = jnp.array([(i, j) for i in range(nb) for j in range(i + 1)], jnp.int32)
+    wts = jnp.array([1.0 if i == j else 2.0 for i in range(nb) for j in range(i + 1)])
+
+    def body(acc, pair):
+        (i, j), w = pair
+        a_i = lax.dynamic_slice_in_dim(a, i * block, block, 1).astype(jnp.float32)
+        a_j = lax.dynamic_slice_in_dim(a, j * block, block, 1).astype(jnp.float32)
+        g_i = lax.dynamic_slice_in_dim(g, i * block, block, 1).astype(jnp.float32)
+        g_j = lax.dynamic_slice_in_dim(g, j * block, block, 1).astype(jnp.float32)
+        gram_a = jnp.einsum("ntd,nsd->nts", a_i, a_j)
+        gram_g = jnp.einsum("ntp,nsp->nts", g_i, g_j)
+        return acc + w * jnp.einsum("nts,nts->n", gram_a, gram_g), None
+
+    acc, _ = lax.scan(body, jnp.zeros((n,), jnp.float32), (ij, wts))
+    return acc
+
+
+def instantiated_norm_sq(a: jax.Array, g: jax.Array, *, block_d: int = 4096) -> jax.Array:
+    """|| a^T g ||_F^2 per row, streaming over fan-in blocks.
+
+    a: (N, T, D), g: (N, T, p) -> (N,) fp32.
+    """
+    n, t, d = a.shape
+    if d <= block_d:
+        grads = jnp.einsum("ntd,ntp->ndp", a.astype(jnp.float32), g.astype(jnp.float32))
+        return jnp.sum(grads * grads, axis=(1, 2))
+    a = _pad_axis(a, 2, block_d)
+    g = g.astype(jnp.float32)
+    nb = a.shape[2] // block_d
+
+    def body(acc, i):
+        a_i = lax.dynamic_slice_in_dim(a, i * block_d, block_d, 2).astype(jnp.float32)
+        part = jnp.einsum("ntd,ntp->ndp", a_i, g)
+        return acc + jnp.sum(part * part, axis=(1, 2)), None
+
+    acc, _ = lax.scan(body, jnp.zeros((n,), jnp.float32), jnp.arange(nb))
+    return acc
+
+
+def embedding_ghost_norm_sq(ids: jax.Array, g: jax.Array, *, block: int = 1024) -> jax.Array:
+    """Index-equality ghost norm. ids: (N, T) int, g: (N, T, p) -> (N,)."""
+    n, t, _ = g.shape
+    if t <= max(block, _DIRECT_T):
+        gf = g.astype(jnp.float32)
+        eq = (ids[:, :, None] == ids[:, None, :]).astype(jnp.float32)
+        gram_g = jnp.einsum("ntp,nsp->nts", gf, gf)
+        return jnp.einsum("nts,nts->n", eq, gram_g)
+
+    # Pad with two *different* sentinel ids so padding never matches anything.
+    pad = (-t) % block
+    if pad:
+        ids_i = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+        g = jnp.pad(g, ((0, 0), (0, pad), (0, 0)))
+    else:
+        ids_i = ids
+    nb = ids_i.shape[1] // block
+    ij = jnp.array([(i, j) for i in range(nb) for j in range(i + 1)], jnp.int32)
+    wts = jnp.array([1.0 if i == j else 2.0 for i in range(nb) for j in range(i + 1)])
+
+    def body(acc, pair):
+        (i, j), w = pair
+        id_i = lax.dynamic_slice_in_dim(ids_i, i * block, block, 1)
+        id_j = lax.dynamic_slice_in_dim(ids_i, j * block, block, 1)
+        g_i = lax.dynamic_slice_in_dim(g, i * block, block, 1).astype(jnp.float32)
+        g_j = lax.dynamic_slice_in_dim(g, j * block, block, 1).astype(jnp.float32)
+        eq = (id_i[:, :, None] == id_j[:, None, :]).astype(jnp.float32)
+        gram_g = jnp.einsum("ntp,nsp->nts", g_i, g_j)
+        return acc + w * jnp.sum(eq * gram_g, axis=(1, 2)), None
+
+    acc, _ = lax.scan(body, jnp.zeros((n,), jnp.float32), (ij, wts))
+    return acc

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for per-sample gradient norms (paper Eq. 2.7).
+
+These materialize the full (T, T) Grams / (D, p) gradients — correct but
+memory-hungry; the chunked ops and the Pallas kernel are checked against them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ghost_norm_sq_ref(a: jax.Array, g: jax.Array) -> jax.Array:
+    """vec(a a^T) . vec(g g^T) per row.  a: (N, T, D), g: (N, T, p) -> (N,)."""
+    a = a.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    gram_a = jnp.einsum("ntd,nsd->nts", a, a)
+    gram_g = jnp.einsum("ntp,nsp->nts", g, g)
+    return jnp.einsum("nts,nts->n", gram_a, gram_g)
+
+
+def instantiated_norm_sq_ref(a: jax.Array, g: jax.Array) -> jax.Array:
+    """|| a^T g ||_F^2 per row (per-sample gradient instantiation)."""
+    a = a.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    grads = jnp.einsum("ntd,ntp->ndp", a, g)
+    return jnp.sum(grads * grads, axis=(1, 2))
+
+
+def embedding_ghost_norm_sq_ref(ids: jax.Array, g: jax.Array) -> jax.Array:
+    """Index-equality ghost norm: sum_{t,t'} [id_t == id_t'] (g_t . g_t').
+
+    ids: (N, T) int, g: (N, T, p) -> (N,).  Equals the Frobenius norm of the
+    per-sample embedding gradient (scatter-add of g rows by token id).
+    """
+    g = g.astype(jnp.float32)
+    eq = (ids[:, :, None] == ids[:, None, :]).astype(jnp.float32)
+    gram_g = jnp.einsum("ntp,nsp->nts", g, g)
+    return jnp.einsum("nts,nts->n", eq, gram_g)

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not module-level state) so importing
+this module never touches jax device initialization.  The dry-run entrypoint
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to get placeholder devices; smoke tests and benches see 1 real device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh() -> Mesh:
+    """Whatever devices exist, as a (data, model=1) mesh (CPU smoke runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)

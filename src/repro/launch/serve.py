@@ -1,0 +1,80 @@
+"""Batched serving driver: prefill + decode with per-request completion.
+
+CPU quickstart:
+    python -m repro.launch.serve --arch mixtral-8x7b --reduced \
+        --batch 4 --prompt-len 16 --max-new 12
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import build_model, get_arch
+from repro.launch.steps import make_decode_step
+from repro.utils.logging import get_logger
+
+log = get_logger("serve")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--eos", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab, dtype=jnp.int32)}
+    if cfg.family == "vlm":
+        batch["prefix"] = jax.random.normal(
+            jax.random.PRNGKey(2), (args.batch, cfg.prefix_tokens, cfg.prefix_dim)
+        ).astype(jnp.dtype(cfg.dtype))
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(3), (args.batch, cfg.encoder_seq, cfg.d_model)
+        ).astype(jnp.dtype(cfg.dtype))
+
+    max_len = args.prompt_len + args.max_new + (cfg.prefix_tokens or 0)
+    state = model.init_state(args.batch, max_len)
+
+    t0 = time.time()
+    logits, state = jax.jit(model.prefill)(params, batch, state)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    decode = jax.jit(make_decode_step(model))
+    done = jnp.zeros((args.batch,), bool)
+    outputs = [tok]
+    t0 = time.time()
+    for _ in range(args.max_new - 1):
+        tok, _, state = decode(params, tok, state)
+        done = done | (tok[:, 0] == args.eos)
+        outputs.append(tok)
+        if bool(jnp.all(done)):
+            break
+    t_decode = time.time() - t0
+    gen = jnp.concatenate(outputs, axis=1)
+    n_tok = int(gen.shape[0] * gen.shape[1])
+    log.info("prefill %.3fs; decode %d tokens in %.3fs (%.1f tok/s)",
+             t_prefill, n_tok, t_decode, n_tok / max(t_decode, 1e-9))
+    for i in range(min(args.batch, 2)):
+        log.info("request %d: %s", i, gen[i].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,81 @@
+"""Input specs per (architecture x shape): ShapeDtypeStruct stand-ins.
+
+``input_specs`` returns abstract shapes for the dry-run (no allocation);
+``materialize`` instantiates concrete arrays for smoke tests / real runs.
+Modality frontends are STUBS per the assignment: whisper gets precomputed
+frame embeddings, phi-3-vision gets precomputed CLIP patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def per_device_batch(shape: ShapeConfig, n_data_shards: int) -> int:
+    assert shape.global_batch % n_data_shards == 0 or n_data_shards % shape.global_batch == 0
+    return max(1, shape.global_batch // n_data_shards)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig, batch: int) -> dict:
+    s = shape.seq_len
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    i32 = jnp.int32
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, s), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((batch, s), i32)
+    elif cfg.family == "vlm":
+        text = s - cfg.prefix_tokens
+        specs["prefix"] = jax.ShapeDtypeStruct((batch, cfg.prefix_tokens, cfg.prefix_dim), jnp.dtype(cfg.dtype))
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, text), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((batch, text), i32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, s), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((batch, s), i32)
+    specs["mask"] = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    return specs
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig, batch: int) -> dict:
+    s = shape.seq_len
+    i32 = jnp.int32
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, s), i32)
+    elif cfg.family == "vlm":
+        specs["prefix"] = jax.ShapeDtypeStruct((batch, cfg.prefix_tokens, cfg.prefix_dim), jnp.dtype(cfg.dtype))
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, s - cfg.prefix_tokens), i32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, s), i32)
+    return specs
+
+
+def decode_token_specs(batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+
+
+def serve_state_specs(model, cfg: ArchConfig, shape: ShapeConfig, batch: int):
+    """Abstract serve state (KV caches / SSM states) for shape ``shape``."""
+    return jax.eval_shape(lambda: model.init_state(batch, shape.seq_len))
+
+
+def materialize(specs: Any, key: jax.Array, vocab: int = 128) -> Any:
+    """Concrete batch from specs (tokens uniform in vocab, floats ~N(0,1))."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for sp, k in zip(leaves, keys):
+        if jnp.issubdtype(sp.dtype, jnp.integer):
+            out.append(jax.random.randint(k, sp.shape, 0, max(vocab, 2), dtype=sp.dtype))
+        else:
+            if len(sp.shape) == 1:  # sample mask
+                out.append(jnp.ones(sp.shape, sp.dtype))
+            else:
+                out.append(jax.random.normal(k, sp.shape, jnp.float32).astype(sp.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

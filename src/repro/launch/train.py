@@ -1,0 +1,204 @@
+"""DP training driver.
+
+Full production loop: data pipeline -> mixed-ghost clipped grads (with
+gradient accumulation / virtual steps) -> Gaussian noise -> optimizer ->
+checkpoint manager -> privacy accountant, with straggler watchdog,
+preemption-to-checkpoint, and an ``--auto-restart`` supervision loop that
+resumes from the latest checkpoint after a crash (fault injection for tests
+via ``--fail-at-step``).
+
+CPU quickstart (reduced config):
+    python -m repro.launch.train --arch qwen2-72b --reduced --steps 20 \
+        --batch 4 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import build_model, get_arch
+from repro.core.engine import PrivacyEngine
+from repro.data.pipeline import DataPipeline
+from repro.data.poisson import poisson_sample_mask
+from repro.data.synthetic import SyntheticLMConfig, synthetic_lm_batch
+from repro.checkpoint.manager import CheckpointManager
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import DPTrainConfig, make_train_state, make_train_step
+from repro.optim import adam, warmup_cosine
+from repro.parallel.reshard import use_reshard_rules
+from repro.parallel.sharding import batch_shardings, state_shardings
+from repro.runtime.fault import PreemptionHandler, StepWatchdog
+from repro.utils.logging import get_logger
+
+log = get_logger("train")
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mode", default="mixed_ghost")
+    ap.add_argument("--clip-norm", type=float, default=1.0)
+    ap.add_argument("--target-epsilon", type=float, default=None)
+    ap.add_argument("--noise-multiplier", type=float, default=1.0)
+    ap.add_argument("--sample-size", type=int, default=50000)
+    ap.add_argument("--poisson", action="store_true",
+                    help="Poisson subsampling masks (DP accounting assumption)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--auto-restart", type=int, default=0,
+                    help="supervise and restart up to N times on failure")
+    ap.add_argument("--fail-at-step", type=int, default=None,
+                    help="fault injection: raise at this step (tests)")
+    ap.add_argument("--log-every", type=int, default=10)
+    return ap.parse_args(argv)
+
+
+def run_once(args) -> int:
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+
+    # privacy engine: sigma from target epsilon (or given), accountant attached
+    engine = PrivacyEngine(
+        loss_with_ctx=model.loss_with_ctx,
+        batch_size=args.batch,
+        sample_size=args.sample_size,
+        steps=args.steps,
+        max_grad_norm=args.clip_norm,
+        target_epsilon=args.target_epsilon,
+        noise_multiplier=None if args.target_epsilon else args.noise_multiplier,
+        mode=args.mode,
+    )
+    log.info("noise multiplier sigma=%.4f (q=%.5f)", engine.noise_multiplier,
+             engine.sampling_rate)
+
+    optimizer = adam(state_dtype=jnp.dtype(cfg.opt_state_dtype))
+    schedule = warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps)
+    dp = DPTrainConfig(
+        clipping_mode=args.mode,
+        clip_norm=args.clip_norm,
+        noise_multiplier=engine.noise_multiplier,
+        logical_batch=args.batch,
+    )
+    step_fn = make_train_step(model, optimizer, schedule, dp)
+
+    state = make_train_state(model, jax.random.PRNGKey(0), optimizer)
+    st_sh = state_shardings(model, mesh, cfg, jax.eval_shape(lambda: state))
+    state = jax.tree_util.tree_map(jax.device_put, state, st_sh)
+
+    # data
+    seq = args.seq if args.reduced else 4096
+    text_len = seq - (cfg.prefix_tokens or 0)
+    lm_cfg = SyntheticLMConfig(vocab=cfg.vocab, seq_len=text_len, batch=args.batch)
+
+    def batch_fn(step, shard):
+        b = synthetic_lm_batch(lm_cfg, step, shard)
+        if args.poisson:
+            key = jax.random.fold_in(jax.random.PRNGKey(4242), step)
+            b["mask"] = poisson_sample_mask(key, args.batch, engine.sampling_rate)
+        if cfg.family == "vlm":
+            key = jax.random.fold_in(jax.random.PRNGKey(77), step)
+            b["prefix"] = jax.random.normal(
+                key, (args.batch, cfg.prefix_tokens, cfg.prefix_dim), jnp.float32
+            ).astype(jnp.dtype(cfg.dtype))
+        if cfg.family == "audio":
+            key = jax.random.fold_in(jax.random.PRNGKey(78), step)
+            b["frames"] = jax.random.normal(
+                key, (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32
+            ).astype(jnp.dtype(cfg.dtype))
+        return b
+
+    start_step = 0
+    manager = None
+    if args.ckpt_dir:
+        manager = CheckpointManager(args.ckpt_dir, save_every=args.ckpt_every)
+        if args.resume and manager.latest() is not None:
+            start_step, state = manager.restore(shardings=st_sh)
+            log.info("resumed from step %d", start_step)
+            engine.record_step(start_step)
+
+    pipeline = DataPipeline(batch_fn, start_step=start_step).start()
+    b_sh = batch_shardings(
+        jax.eval_shape(lambda: batch_fn(0, 0)), mesh, cfg
+    )
+    with use_reshard_rules(mesh, cfg):
+        jit_step = jax.jit(
+            step_fn, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None),
+            donate_argnums=(0,),
+        ).lower(jax.eval_shape(lambda: state),
+                jax.eval_shape(lambda: batch_fn(0, 0))).compile()
+
+    watchdog = StepWatchdog()
+    preempt = PreemptionHandler().install()
+
+    step = start_step
+    try:
+        while step < args.steps:
+            step_idx, batch = pipeline.next()
+            watchdog.start_step()
+            if args.fail_at_step is not None and step_idx == args.fail_at_step:
+                raise RuntimeError(f"injected fault at step {step_idx}")
+            state, metrics = jit_step(state, batch)
+            engine.record_step()
+            dt = watchdog.end_step(step_idx)
+            step = step_idx + 1
+            if step % args.log_every == 0 or step == args.steps:
+                eps, delta = engine.privacy_spent()
+                log.info(
+                    "step %d loss=%.4f lr=%.2e clip_frac=%.2f eps=%.3f (%.2fs/step)",
+                    step, float(metrics["loss"]), float(metrics["lr"]),
+                    float(metrics["clip_frac"]), eps, dt,
+                )
+            if manager is not None:
+                if preempt.preempted():
+                    manager.save(step, state, force=True)
+                    manager.wait()
+                    log.warning("preempted: checkpointed step %d, exiting", step)
+                    return 0
+                manager.save(step, state)
+    finally:
+        pipeline.stop()
+        if manager is not None:
+            manager.save(step, state, force=True)
+            manager.wait()
+    eps, delta = engine.privacy_spent()
+    log.info("done: %d steps, privacy spent (eps=%.3f, delta=%.1e)", step, eps, delta)
+    return 0
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    if args.auto_restart <= 0:
+        return run_once(args)
+    attempts = 0
+    while True:
+        try:
+            return run_once(args)
+        except Exception as e:  # noqa: BLE001 — supervision loop
+            attempts += 1
+            if attempts > args.auto_restart:
+                log.error("giving up after %d restarts", attempts - 1)
+                raise
+            log.warning("run failed (%s); auto-restart %d/%d from latest checkpoint",
+                        e, attempts, args.auto_restart)
+            args = dataclasses.replace(args) if dataclasses.is_dataclass(args) else args
+            args.resume = True
+            args.fail_at_step = None  # injected fault only fires once
+            time.sleep(0.5)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,145 @@
+"""Decoder-only language model (dense / MoE / hybrid / SSM / VLM families).
+
+Exposes the three entry points the launcher lowers:
+- ``loss_with_ctx(params, batch, ctx)`` — per-sample losses, DP taps threaded
+- ``prefill(params, batch, state)``     — full forward + cache fill
+- ``decode_step(params, tokens, state)``— one token with cache/SSM state
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.taps import Ctx
+from repro.models.blocks import build_period
+from repro.models.losses import per_sample_xent
+from repro.nn.module import Dense, Embedding, LayerNorm, RMSNorm
+from repro.nn.stack import ScannedStack
+
+
+class DecoderLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        dtype = jnp.dtype(cfg.dtype)
+        param_dtype = jnp.dtype(cfg.param_dtype)
+        self.dtype = dtype
+        d = cfg.d_model
+        self.embed = Embedding("embed", cfg.vocab, d, dtype=dtype, param_dtype=param_dtype)
+        self.use_learned_pos = cfg.norm == "layernorm"
+        if self.use_learned_pos:
+            self.pos_embed = Embedding(
+                "pos_embed", max(cfg.encoder_seq, 32768), d,
+                dtype=dtype, param_dtype=param_dtype, axes_=(None, "embed"),
+            )
+        if cfg.prefix_tokens:
+            self.prefix_proj = Dense(
+                "prefix_proj", cfg.prefix_dim, d, use_bias=True,
+                dtype=dtype, param_dtype=param_dtype, w_axes=(None, "embed"),
+            )
+        period, n_periods = build_period(cfg, dtype=dtype, param_dtype=param_dtype)
+        self.layers = ScannedStack("layers", period, n_periods, remat=cfg.remat)
+        norm_cls = RMSNorm if cfg.norm == "rmsnorm" else LayerNorm
+        self.norm_f = norm_cls("norm_f", d, dtype=dtype, param_dtype=param_dtype)
+        self.lm_head = Dense(
+            "lm_head", d, cfg.vocab, use_bias=False,
+            dtype=dtype, param_dtype=param_dtype, w_axes=("embed", "vocab"),
+        )
+
+    # -- params ------------------------------------------------------------
+    def init(self, key: jax.Array) -> Any:
+        ks = iter(jax.random.split(key, 6))
+        p = {
+            "embed": self.embed.init(next(ks)),
+            "layers": self.layers.init(next(ks)),
+            "norm_f": self.norm_f.init(next(ks)),
+            "lm_head": self.lm_head.init(next(ks)),
+        }
+        if self.use_learned_pos:
+            p["pos_embed"] = self.pos_embed.init(next(ks))
+        if self.cfg.prefix_tokens:
+            p["prefix_proj"] = self.prefix_proj.init(next(ks))
+        return p
+
+    def axes(self) -> Any:
+        a = {
+            "embed": self.embed.axes(),
+            "layers": self.layers.axes(),
+            "norm_f": self.norm_f.axes(),
+            "lm_head": self.lm_head.axes(),
+        }
+        if self.use_learned_pos:
+            a["pos_embed"] = self.pos_embed.axes()
+        if self.cfg.prefix_tokens:
+            a["prefix_proj"] = self.prefix_proj.axes()
+        return a
+
+    # -- shared trunk --------------------------------------------------------
+    def _trunk(self, params, tokens, ctx, *, prefix=None, cache=None,
+               positions=None, dispatch="per_sample"):
+        x = self.embed(params["embed"], tokens, ctx.scope("embed"))
+        if prefix is not None:
+            pe = self.prefix_proj(
+                params["prefix_proj"], prefix.astype(self.dtype), ctx.scope("prefix_proj")
+            )
+            x = jnp.concatenate([pe, x], axis=1)
+        s = x.shape[1]
+        if positions is None:
+            positions = jnp.arange(s)
+        if self.use_learned_pos:
+            pos_ids = jnp.broadcast_to(positions, (x.shape[0], s))
+            x = x + self.pos_embed(params["pos_embed"], pos_ids, ctx.scope("pos_embed"))
+        x, new_cache = self.layers(
+            params["layers"], x, ctx.scope("layers"), cache=cache,
+            positions=positions, dispatch=dispatch,
+        )
+        x = self.norm_f(params["norm_f"], x, ctx.scope("norm_f"))
+        return x, new_cache
+
+    # -- training ------------------------------------------------------------
+    def loss_with_ctx(self, params, batch, ctx: Ctx) -> jax.Array:
+        x, _ = self._trunk(
+            params, batch["tokens"], ctx, prefix=batch.get("prefix"),
+        )
+        if self.cfg.prefix_tokens:
+            x = x[:, batch["prefix"].shape[1]:]
+
+        # head + CE rematted: the (B, S, V) logits region dominates fixed
+        # memory at 150k vocab; recomputing it per backward pass keeps only
+        # x as the residual
+        def head_loss(head_params, x_in):
+            logits = self.lm_head(head_params, x_in, ctx.scope("lm_head"))
+            return per_sample_xent(logits, batch["labels"], batch.get("mask"))
+
+        if self.cfg.remat:
+            head_loss = jax.checkpoint(head_loss)
+        return head_loss(params["lm_head"], x)
+
+    # -- serving ---------------------------------------------------------------
+    def init_state(self, batch: int, max_len: int) -> dict:
+        cache = self.layers.init_cache(batch, self.dtype, max_len=max_len)
+        return {"cache": cache, "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, batch, state) -> tuple[jax.Array, dict]:
+        ctx = Ctx.disabled()
+        tokens = batch["tokens"]
+        x, cache = self._trunk(
+            params, tokens, ctx, prefix=batch.get("prefix"),
+            cache=state["cache"], dispatch="global",
+        )
+        logits = self.lm_head(params["lm_head"], x[:, -1:], ctx)
+        s = x.shape[1]
+        return logits, {"cache": cache, "pos": state["pos"] + s}
+
+    def decode_step(self, params, tokens, state) -> tuple[jax.Array, dict]:
+        ctx = Ctx.disabled()
+        pos = state["pos"]
+        positions = pos + jnp.arange(tokens.shape[1])
+        x, cache = self._trunk(
+            params, tokens, ctx, cache=state["cache"], positions=positions,
+            dispatch="global",
+        )
+        logits = self.lm_head(params["lm_head"], x, ctx)
+        return logits, {"cache": cache, "pos": pos + tokens.shape[1]}

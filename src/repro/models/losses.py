@@ -1,0 +1,29 @@
+"""Per-sample losses (the DP unit of account is the sample, not the token)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def per_sample_xent(
+    logits: jax.Array,  # (B, S, V)
+    labels: jax.Array,  # (B, S) int; -100 = ignore
+    sample_mask: Optional[jax.Array] = None,  # (B,)
+) -> jax.Array:
+    """Mean token cross-entropy per sample: (B,) fp32.
+
+    The logsumexp upcast is fused by XLA (no fp32 logits materialization).
+    """
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)  # (B, S)
+    picked = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    tok_loss = (lse - picked) * valid.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(valid, axis=-1), 1).astype(jnp.float32)
+    loss = jnp.sum(tok_loss, axis=-1) / denom
+    if sample_mask is not None:
+        loss = loss * sample_mask.astype(loss.dtype)
+    return loss

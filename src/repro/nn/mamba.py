@@ -1,0 +1,196 @@
+"""Mamba block (SSD / Mamba-2 style scalar-per-head decay), TPU-native.
+
+Hardware adaptation (documented in DESIGN.md): the original Mamba-1 CUDA
+kernel runs a sequential selective scan with per-(channel, state) decays in
+SRAM.  On TPU we use the SSD formulation — scalar decay per head per step —
+whose chunked form is MXU-friendly matmuls (see ``ssm_scan.chunked_ssm``).
+
+All trainable parameters enter through taps:
+- ``in_proj`` / ``out_proj``: matmul taps (Dense)
+- ``conv1d``: dw_conv tap
+- ``dt_bias``: bias tap on the dt stream
+- ``A_log``:  scale tap on the decay stream (d log_a / d A_log = log_a)
+- ``D``:      scale tap on the skip stream
+so per-sample clipping covers the whole block exactly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.taps import Ctx
+from repro.nn.conv import DepthwiseConv1d
+from repro.nn.module import Dense, Module, Params, AxesTree, RMSNorm
+from repro.nn.ssm_scan import chunked_ssm, ssm_decode_step
+from repro.parallel.reshard import shard_heads
+
+
+class MambaBlock(Module):
+    def __init__(
+        self,
+        name: str,
+        d_model: int,
+        *,
+        expand: int = 2,
+        head_dim: int = 64,
+        d_state: int = 64,
+        conv_k: int = 4,
+        chunk: int = 256,
+        dtype=jnp.float32,
+        param_dtype=jnp.float32,
+        dp: bool = True,
+    ):
+        self.name = name
+        self.d_model = d_model
+        self.d_inner = expand * d_model
+        assert self.d_inner % head_dim == 0
+        self.n_heads = self.d_inner // head_dim
+        self.head_dim = head_dim
+        self.d_state = d_state
+        self.conv_k = conv_k
+        self.chunk = chunk
+        self.dtype = dtype
+        self.param_dtype = param_dtype
+        self.dp = dp
+        # separate projections (a fused one would need sharded-dim splits):
+        # z (d_inner), x (d_inner), bcdt (2*d_state + H, replicated — tiny)
+        common = dict(dtype=dtype, param_dtype=param_dtype, dp=dp)
+        self.in_z = Dense(
+            f"{name}.in_z", d_model, self.d_inner, use_bias=False,
+            w_axes=("embed", "mlp"), **common,
+        )
+        self.in_x = Dense(
+            f"{name}.in_x", d_model, self.d_inner, use_bias=False,
+            w_axes=("embed", "mlp"), **common,
+        )
+        self.in_bcdt = Dense(
+            f"{name}.in_bcdt", d_model, 2 * d_state + self.n_heads, use_bias=False,
+            w_axes=("embed", None), **common,
+        )
+        self.conv = DepthwiseConv1d(
+            f"{name}.conv", self.d_inner, conv_k, use_bias=True, **common
+        )
+        self.norm = RMSNorm(f"{name}.norm", self.d_inner, **common)
+        self.out_proj = Dense(
+            f"{name}.out_proj", self.d_inner, d_model, use_bias=False,
+            w_axes=("mlp", "embed"), **common,
+        )
+
+    def init(self, key: jax.Array) -> Params:
+        ks = jax.random.split(key, 5)
+        h = self.n_heads
+        # dt bias: inverse softplus of dt in [1e-3, 1e-1] (mamba default)
+        dt = jnp.exp(
+            jax.random.uniform(ks[3], (h,)) * (math.log(0.1) - math.log(1e-3))
+            + math.log(1e-3)
+        )
+        dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+        a_init = jnp.log(jnp.linspace(1.0, 16.0, h))
+        ks = list(ks) + list(jax.random.split(ks[0], 2))
+        return {
+            "in_z": self.in_z.init(ks[0]),
+            "in_x": self.in_x.init(ks[5]),
+            "in_bcdt": self.in_bcdt.init(ks[6]),
+            "conv": self.conv.init(ks[1]),
+            "out_proj": self.out_proj.init(ks[2]),
+            "norm": self.norm.init(ks[4]),
+            "dt_bias": dt_bias.astype(self.param_dtype),
+            "A_log": a_init.astype(self.param_dtype),
+            "D": jnp.ones((h,), self.param_dtype),
+        }
+
+    def axes(self) -> AxesTree:
+        return {
+            "in_z": self.in_z.axes(),
+            "in_x": self.in_x.axes(),
+            "in_bcdt": self.in_bcdt.axes(),
+            "conv": self.conv.axes(),
+            "out_proj": self.out_proj.axes(),
+            "norm": self.norm.axes(),
+            "dt_bias": (None,),
+            "A_log": (None,),
+            "D": (None,),
+        }
+
+
+    def __call__(
+        self,
+        params: Params,
+        x: jax.Array,  # (B, T, d)
+        ctx: Ctx,
+        *,
+        cache: Optional[dict] = None,
+    ) -> tuple[jax.Array, Optional[dict]]:
+        bsz, t, _ = x.shape
+        h, dh, ds = self.n_heads, self.head_dim, self.d_state
+
+        z = self.in_z(params["in_z"], x, ctx.scope("in_z"))
+        xs = self.in_x(params["in_x"], x, ctx.scope("in_x"))
+        bcdt = self.in_bcdt(params["in_bcdt"], x, ctx.scope("in_bcdt"))
+        ds = self.d_state
+        b_in = bcdt[..., :ds]
+        c_in = bcdt[..., ds : 2 * ds]
+        dt = bcdt[..., 2 * ds :]
+
+        conv_state = cache["conv"] if cache is not None else None
+        xs, new_conv_state = self.conv(params["conv"], xs, ctx.scope("conv"), state=conv_state)
+        xs = jax.nn.silu(xs)
+
+        # dt stream with bias tap
+        dt = dt + params["dt_bias"].astype(dt.dtype)
+        if self.dp and ctx.collect:
+            dt = ctx.tap(
+                "dt_bias@out", dt, kind="bias", T=t, D=1, p=h,
+                param_path="dt_bias",
+            )
+        delta = jax.nn.softplus(dt.astype(jnp.float32))  # (B, T, H)
+
+        # decay stream: log_a = -exp(A_log) * delta ; d(log_a)/d(A_log) = log_a
+        log_a = -jnp.exp(params["A_log"].astype(jnp.float32)) * delta
+        if self.dp and ctx.collect:
+            log_a = ctx.tap(
+                "A_log@out", log_a, kind="scale", a=log_a, T=t, D=h, p=h,
+                param_path="A_log",
+            )
+
+        v = xs.reshape(bsz, t, h, dh) * delta[..., None].astype(xs.dtype)
+        q = jnp.broadcast_to(c_in[:, :, None, :], (bsz, t, h, ds))
+        k = jnp.broadcast_to(b_in[:, :, None, :], (bsz, t, h, ds))
+        if t > 1:  # decode (t=1) tensors are tiny; constraints only add reshards
+            v, q, k = shard_heads(v), shard_heads(q), shard_heads(k)
+            log_a = shard_heads(log_a, axis=2) if log_a.ndim > 2 else log_a
+
+        if cache is not None and t == 1:
+            y, new_ssm = ssm_decode_step(q, k, v, log_a, cache["ssm"])
+            y = y.reshape(bsz, t, self.d_inner)
+        else:
+            state0 = cache["ssm"] if cache is not None else None
+            y, new_ssm = chunked_ssm(q, k, v, log_a, chunk=self.chunk, state0=state0)
+            y = y.reshape(bsz, t, self.d_inner)
+
+        # D skip: s = D * xs  (scale tap, a = xs per head)
+        skip = xs * jnp.repeat(params["D"].astype(xs.dtype), dh)[None, None, :]
+        if self.dp and ctx.collect:
+            # per-head scale: record per-head-summed jacobian entries
+            skip = ctx.tap(
+                "D@out", skip, kind="scale_grouped", a=xs, T=t, D=dh, p=h,
+                param_path="D",
+            )
+        y = y + skip
+        y = y * jax.nn.silu(z)
+        y = self.norm(params["norm"], y, ctx.scope("norm"))
+        out = self.out_proj(params["out_proj"], y, ctx.scope("out_proj"))
+
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv": new_conv_state, "ssm": new_ssm}
+        return out, new_cache
+
+    def init_cache(self, batch: int, dtype) -> dict:
+        return {
+            "conv": jnp.zeros((batch, self.conv_k - 1, self.d_inner), dtype),
+            "ssm": jnp.zeros((batch, self.n_heads, self.d_state, self.head_dim), jnp.float32),
+        }

@@ -1,0 +1,178 @@
+"""Mixture-of-Experts with per-sample capacity dispatch.
+
+Two dispatch modes:
+
+- ``per_sample`` (DP training): capacity is allocated *per (sample, expert)*,
+  so every expert matmul keeps the batch dimension and sample attribution is
+  exact — the DP tap records activations as (B, E, C, d) with ``n_groups=E``
+  and the ghost norm sums over experts (Alg. 1 applies per expert matrix).
+  This is also what makes per-sample clipping of MoE *possible at all*:
+  token-global dispatch would mix samples inside one expert matmul.
+
+- ``global`` (serving): tokens from the whole batch share expert capacity
+  (standard GShard-style inference dispatch, better utilization; no DP).
+
+Dispatch is gather-based (argsort-free): slots are assigned by a cumulative
+count over token-choice order; over-capacity tokens are dropped (scatter mode
+'drop') and their combine weight zeroed.  Expert weights are (E, d, f) —
+sharded expert-parallel when E divides the model axis, else tensor-parallel
+inside each expert (resolved by ``repro.parallel.sharding``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.taps import Ctx
+from repro.nn.module import Dense, Module, Params, AxesTree, normal_init
+from repro.parallel.reshard import reshard_param
+
+
+def _dispatch_one(x, logits, top_k: int, capacity: int, n_experts: int):
+    """Single-sample dispatch. x: (T, d), logits: (T, E).
+
+    Returns (xe (E, C, d), combine info (idx, slot, gate, keep)).
+    """
+    t, _ = x.shape
+    gate_logits, idx = jax.lax.top_k(logits, top_k)  # (T, k)
+    gates = jax.nn.softmax(gate_logits.astype(jnp.float32), axis=-1)
+
+    flat_e = idx.reshape(-1)  # (T*k,) in token-major, choice-minor order
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)  # (T*k, E)
+    slot_flat = jnp.cumsum(onehot, axis=0) - onehot  # occupancy before this entry
+    slot_flat = jnp.sum(slot_flat * onehot, axis=-1)  # (T*k,)
+    keep_flat = slot_flat < capacity
+
+    token_flat = jnp.repeat(jnp.arange(t), top_k)
+    table = jnp.full((n_experts, capacity), t, jnp.int32)  # sentinel = t (OOB)
+    table = table.at[flat_e, slot_flat].set(token_flat, mode="drop")
+
+    xe = jnp.take(x, table, axis=0, mode="fill", fill_value=0)  # (E, C, d)
+    slot = slot_flat.reshape(t, top_k)
+    keep = keep_flat.reshape(t, top_k)
+    return xe, (idx, slot, gates, keep)
+
+
+def _combine_one(ye, info, top_k: int, capacity: int):
+    """ye: (E, C, p) -> (T, p) weighted combine."""
+    idx, slot, gates, keep = info
+    t = idx.shape[0]
+    flat_e = idx.reshape(-1)
+    flat_s = jnp.clip(slot.reshape(-1), 0, capacity - 1)
+    picked = ye[flat_e, flat_s]  # (T*k, p)
+    w = (gates * keep.astype(gates.dtype)).reshape(-1)[:, None]
+    return jnp.sum((picked * w).reshape(t, top_k, -1), axis=1)
+
+
+class MoE(Module):
+    """Top-k routed experts with fused gate+up projections (SwiGLU experts)."""
+
+    def __init__(
+        self,
+        name: str,
+        d_model: int,
+        d_ff: int,
+        n_experts: int,
+        top_k: int = 2,
+        *,
+        capacity_factor: float = 1.25,
+        dtype=jnp.float32,
+        param_dtype=jnp.float32,
+        dp: bool = True,
+    ):
+        self.name = name
+        self.d_model = d_model
+        self.d_ff = d_ff
+        self.n_experts = n_experts
+        self.top_k = top_k
+        self.capacity_factor = capacity_factor
+        self.dtype = dtype
+        self.param_dtype = param_dtype
+        self.dp = dp
+        self.router = Dense(
+            f"{name}.router", d_model, n_experts, use_bias=False,
+            w_axes=("embed", None), dtype=jnp.float32, param_dtype=jnp.float32, dp=dp,
+        )
+
+    def init(self, key: jax.Array) -> Params:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        e, d, f = self.n_experts, self.d_model, self.d_ff
+        return {
+            "router": self.router.init(k1),
+            "wg": normal_init(k2, (e, d, f), 1.0 / math.sqrt(d), self.param_dtype),
+            "wu": normal_init(k4, (e, d, f), 1.0 / math.sqrt(d), self.param_dtype),
+            "wo": normal_init(k3, (e, f, d), 1.0 / math.sqrt(f), self.param_dtype),
+        }
+
+    def axes(self) -> AxesTree:
+        return {
+            "router": self.router.axes(),
+            "wg": ("expert", "embed", "moe_mlp"),
+            "wu": ("expert", "embed", "moe_mlp"),
+            "wo": ("expert", "moe_mlp", "embed"),
+        }
+
+    def capacity(self, tokens_per_dispatch: int) -> int:
+        cap = int(
+            math.ceil(tokens_per_dispatch * self.top_k / self.n_experts * self.capacity_factor)
+        )
+        return max(cap, self.top_k)
+
+    def __call__(
+        self,
+        params: Params,
+        x: jax.Array,  # (B, T, d)
+        ctx: Ctx,
+        *,
+        dispatch: str = "per_sample",  # "per_sample" (DP train) | "global" (serve)
+    ) -> jax.Array:
+        b, t, d = x.shape
+        orig_b, orig_t = b, t
+        if dispatch == "global":
+            x = x.reshape(1, b * t, d)
+            b, t = 1, b * t
+
+        logits = self.router(params["router"], x, ctx.scope("router"))  # (B, T, E) fp32
+        cap = self.capacity(t)
+
+        xe, info = jax.vmap(
+            lambda xx, ll: _dispatch_one(xx, ll, self.top_k, cap, self.n_experts)
+        )(x, logits)
+        # xe: (B, E, C, d)
+        wg = reshard_param(params["wg"].astype(self.dtype), ("expert", "embed", "moe_mlp"))
+        wu = reshard_param(params["wu"].astype(self.dtype), ("expert", "embed", "moe_mlp"))
+        wo = reshard_param(params["wo"].astype(self.dtype), ("expert", "moe_mlp", "embed"))
+        xe = xe.astype(self.dtype)
+        gate = jnp.einsum("becd,edf->becf", xe, wg)
+        up = jnp.einsum("becd,edf->becf", xe, wu)
+        if self.dp and ctx.collect:
+            gate = ctx.tap(
+                "wg@out", gate, kind="matmul", a=xe, T=cap, D=d, p=self.d_ff,
+                n_groups=self.n_experts, param_path="wg",
+            )
+            up = ctx.tap(
+                "wu@out", up, kind="matmul", a=xe, T=cap, D=d, p=self.d_ff,
+                n_groups=self.n_experts, param_path="wu",
+            )
+        act = jax.nn.silu(gate) * up
+        ye = jnp.einsum("becf,efd->becd", act, wo)
+        if self.dp and ctx.collect:
+            ye = ctx.tap(
+                "wo@out",
+                ye,
+                kind="matmul",
+                a=act,
+                T=cap,
+                D=self.d_ff,
+                p=d,
+                n_groups=self.n_experts,
+                param_path="wo",
+            )
+        y = jax.vmap(lambda yy, ii: _combine_one(yy, ii, self.top_k, cap))(ye, info)
+        y = y.astype(self.dtype)
+        if dispatch == "global":
+            y = y.reshape(orig_b, orig_t, d)
+        return y

@@ -1,0 +1,315 @@
+"""xLSTM blocks: mLSTM (parallelizable matrix memory) and sLSTM (sequential).
+
+Faithfulness notes (DESIGN.md §assumptions-changed):
+- mLSTM uses a sigmoid input gate folded into k and a logsigmoid forget gate
+  as the scalar decay — the bounded-gate variant of the paper's exponential
+  gating (removes the running max-stabilizer; numerics stay in (0,1]).
+  The normalizer n_t is carried as an extra ones-column of v, and the output
+  is num / max(|den|, 1) as in the xLSTM paper.
+- sLSTM keeps the exponential input gate WITH the max-stabilizer, and a full
+  (not block-diagonal) recurrent matrix R.  The recurrent weight is per-sample
+  clipped through a tap on the scan *input stream* (see taps.Ctx.record_act).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.taps import Ctx
+from repro.nn.conv import DepthwiseConv1d
+from repro.nn.mlp import GatedMLP
+from repro.nn.module import Dense, Module, Params, AxesTree, RMSNorm
+from repro.nn.ssm_scan import chunked_ssm, ssm_decode_step
+from repro.parallel.reshard import reshard_param
+
+
+class MLSTMBlock(Module):
+    """Pre-norm mLSTM block with internal up/down projection (PF=2)."""
+
+    def __init__(
+        self,
+        name: str,
+        d_model: int,
+        n_heads: int,
+        *,
+        expand: int = 2,
+        conv_k: int = 4,
+        chunk: int = 256,
+        dtype=jnp.float32,
+        param_dtype=jnp.float32,
+        dp: bool = True,
+    ):
+        self.name = name
+        self.d_model = d_model
+        self.d_inner = expand * d_model
+        self.n_heads = n_heads
+        assert self.d_inner % n_heads == 0
+        self.head_dim = self.d_inner // n_heads
+        self.conv_k = conv_k
+        self.chunk = chunk
+        self.dtype = dtype
+        self.param_dtype = param_dtype
+        self.dp = dp
+        common = dict(dtype=dtype, param_dtype=param_dtype, dp=dp)
+        self.norm = RMSNorm(f"{name}.norm", d_model, **common)
+        self.in_x = Dense(
+            f"{name}.in_x", d_model, self.d_inner, use_bias=False,
+            w_axes=("embed", "mlp"), **common,
+        )
+        self.in_z = Dense(
+            f"{name}.in_z", d_model, self.d_inner, use_bias=False,
+            w_axes=("embed", "mlp"), **common,
+        )
+        self.conv = DepthwiseConv1d(f"{name}.conv", self.d_inner, conv_k, **common)
+        self.wq = Dense(
+            f"{name}.q", self.d_inner, self.d_inner, use_bias=False,
+            w_axes=("mlp", "heads"), **common,
+        )
+        self.wk = Dense(
+            f"{name}.k", self.d_inner, self.d_inner, use_bias=False,
+            w_axes=("mlp", "heads"), **common,
+        )
+        self.gates = Dense(
+            f"{name}.gates", self.d_inner, 2 * n_heads, use_bias=True,
+            w_axes=("mlp", None), **common,
+        )
+        self.out_norm = RMSNorm(f"{name}.out_norm", self.d_inner, **common)
+        self.out_proj = Dense(
+            f"{name}.out_proj", self.d_inner, d_model, use_bias=False,
+            w_axes=("mlp", "embed"), **common,
+        )
+
+    def init(self, key: jax.Array) -> Params:
+        ks = jax.random.split(key, 8)
+        ks = jax.random.split(ks[0], 9)
+        p = {
+            "norm": self.norm.init(ks[0]),
+            "in_x": self.in_x.init(ks[1]),
+            "in_z": self.in_z.init(ks[8]),
+            "conv": self.conv.init(ks[2]),
+            "q": self.wq.init(ks[3]),
+            "k": self.wk.init(ks[4]),
+            "gates": self.gates.init(ks[5]),
+            "out_norm": self.out_norm.init(ks[6]),
+            "out_proj": self.out_proj.init(ks[7]),
+        }
+        # forget-gate bias init: positive → long memory at init
+        p["gates"]["b"] = p["gates"]["b"].at[self.n_heads :].set(3.0)
+        return p
+
+    def axes(self) -> AxesTree:
+        return {
+            "norm": self.norm.axes(),
+            "in_x": self.in_x.axes(),
+            "in_z": self.in_z.axes(),
+            "conv": self.conv.axes(),
+            "q": self.wq.axes(),
+            "k": self.wk.axes(),
+            "gates": self.gates.axes(),
+            "out_norm": self.out_norm.axes(),
+            "out_proj": self.out_proj.axes(),
+        }
+
+    def __call__(
+        self,
+        params: Params,
+        x: jax.Array,
+        ctx: Ctx,
+        *,
+        cache: Optional[dict] = None,
+    ) -> tuple[jax.Array, Optional[dict]]:
+        bsz, t, _ = x.shape
+        h, dh = self.n_heads, self.head_dim
+        res = x
+        x = self.norm(params["norm"], x, ctx.scope("norm"))
+        xi = self.in_x(params["in_x"], x, ctx.scope("in_x"))
+        z = self.in_z(params["in_z"], x, ctx.scope("in_z"))
+
+        conv_state = cache["conv"] if cache is not None else None
+        xc, new_conv = self.conv(params["conv"], xi, ctx.scope("conv"), state=conv_state)
+        xc = jax.nn.silu(xc)
+
+        q = self.wq(params["q"], xc, ctx.scope("q")).reshape(bsz, t, h, dh)
+        k = self.wk(params["k"], xc, ctx.scope("k")).reshape(bsz, t, h, dh) * (dh**-0.5)
+        v = xi.reshape(bsz, t, h, dh)
+
+        g = self.gates(params["gates"], xc, ctx.scope("gates"))  # (B, T, 2H)
+        i_gate = jax.nn.sigmoid(g[..., :h].astype(jnp.float32))
+        log_f = jax.nn.log_sigmoid(g[..., h:].astype(jnp.float32))
+
+        k = k * i_gate[..., None].astype(k.dtype)
+        ones = jnp.ones((bsz, t, h, 1), v.dtype)
+        v_ext = jnp.concatenate([v, ones * i_gate[..., None].astype(v.dtype)], axis=-1)
+
+        if cache is not None and t == 1:
+            y_ext, new_ssm = ssm_decode_step(q, k, v_ext, log_f, cache["ssm"])
+            y_ext = y_ext[:, None] if y_ext.ndim == 3 else y_ext
+        else:
+            state0 = cache["ssm"] if cache is not None else None
+            y_ext, new_ssm = chunked_ssm(q, k, v_ext, log_f, chunk=self.chunk, state0=state0)
+        num = y_ext[..., :dh]
+        den = y_ext[..., dh]
+        y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        y = y.reshape(bsz, t, self.d_inner)
+        y = self.out_norm(params["out_norm"], y, ctx.scope("out_norm"))
+        y = y * jax.nn.silu(z)
+        out = res + self.out_proj(params["out_proj"], y, ctx.scope("out_proj"))
+
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv": new_conv, "ssm": new_ssm}
+        return out, new_cache
+
+    def init_cache(self, batch: int, dtype) -> dict:
+        return {
+            "conv": jnp.zeros((batch, self.conv_k - 1, self.d_inner), dtype),
+            "ssm": jnp.zeros(
+                (batch, self.n_heads, self.head_dim, self.head_dim + 1), jnp.float32
+            ),
+        }
+
+
+class SLSTMBlock(Module):
+    """Pre-norm sLSTM with recurrent mixing + post gated FFN (PF=4/3)."""
+
+    def __init__(
+        self,
+        name: str,
+        d_model: int,
+        n_heads: int,
+        *,
+        conv_k: int = 4,
+        ffn_factor: float = 4.0 / 3.0,
+        dtype=jnp.float32,
+        param_dtype=jnp.float32,
+        dp: bool = True,
+    ):
+        self.name = name
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.conv_k = conv_k
+        self.dtype = dtype
+        self.param_dtype = param_dtype
+        self.dp = dp
+        # round to a 64-multiple so the "mlp" axis shards evenly on 16-way TP
+        d_ff = max(64, int(round(ffn_factor * d_model / 64) * 64))
+        common = dict(dtype=dtype, param_dtype=param_dtype, dp=dp)
+        self.norm = RMSNorm(f"{name}.norm", d_model, **common)
+        self.conv = DepthwiseConv1d(f"{name}.conv", d_model, conv_k, **common)
+        self.wx = Dense(
+            f"{name}.wx", d_model, 4 * d_model, use_bias=True,
+            w_axes=("embed", "mlp"), **common,
+        )
+        self.wr = Dense(
+            f"{name}.wr", d_model, 4 * d_model, use_bias=False,
+            w_axes=("embed", "mlp"), **common,
+        )
+        self.out_norm = RMSNorm(f"{name}.out_norm", d_model, **common)
+        self.ffn_norm = RMSNorm(f"{name}.ffn_norm", d_model, **common)
+        self.ffn = GatedMLP(f"{name}.ffn", d_model, d_ff, **common)
+
+    def init(self, key: jax.Array) -> Params:
+        ks = jax.random.split(key, 7)
+        p = {
+            "norm": self.norm.init(ks[0]),
+            "conv": self.conv.init(ks[1]),
+            "wx": self.wx.init(ks[2]),
+            "wr": self.wr.init(ks[3]),
+            "out_norm": self.out_norm.init(ks[4]),
+            "ffn_norm": self.ffn_norm.init(ks[5]),
+            "ffn": self.ffn.init(ks[6]),
+        }
+        d = self.d_model
+        # forget gate bias positive
+        p["wx"]["b"] = p["wx"]["b"].at[d : 2 * d].set(3.0)
+        return p
+
+    def axes(self) -> AxesTree:
+        return {
+            "norm": self.norm.axes(),
+            "conv": self.conv.axes(),
+            "wx": self.wx.axes(),
+            "wr": self.wr.axes(),
+            "out_norm": self.out_norm.axes(),
+            "ffn_norm": self.ffn_norm.axes(),
+            "ffn": self.ffn.axes(),
+        }
+
+    def __call__(
+        self,
+        params: Params,
+        x: jax.Array,
+        ctx: Ctx,
+        *,
+        cache: Optional[dict] = None,
+    ) -> tuple[jax.Array, Optional[dict]]:
+        bsz, t, d = x.shape
+        res = x
+        xn = self.norm(params["norm"], x, ctx.scope("norm"))
+        conv_state = cache["conv"] if cache is not None else None
+        xc, new_conv = self.conv(params["conv"], xn, ctx.scope("conv"), state=conv_state)
+        xc = jax.nn.silu(xc)
+        # Input-stream preactivations (W path); the recurrent tap rides here.
+        pre = self.wx(params["wx"], xc, ctx.scope("wx"))  # (B, T, 4d)
+        if self.dp and ctx.collect:
+            pre = ctx.tap(
+                "wr@out", pre, kind="matmul", a=None, T=t, D=d, p=4 * d,
+                param_path="wr/w", late=True,
+            )
+        wr = reshard_param(params["wr"]["w"].astype(pre.dtype), ("embed", "mlp"))
+
+        if cache is not None:
+            h0 = cache["h"]
+            c0, n0, m0 = cache["c"], cache["n"], cache["m"]
+        else:
+            h0 = jnp.zeros((bsz, d), pre.dtype)
+            c0 = jnp.zeros((bsz, d), jnp.float32)
+            n0 = jnp.zeros((bsz, d), jnp.float32)
+            m0 = jnp.full((bsz, d), -1e30, jnp.float32)
+
+        def step(carry, pre_t):
+            h, c, n, m = carry
+            s = pre_t + h @ wr  # (B, 4d)
+            zi, fo, ii, oo = jnp.split(s.astype(jnp.float32), 4, axis=-1)
+            z_g = jnp.tanh(zi)
+            log_i = ii
+            log_f = jax.nn.log_sigmoid(fo)
+            o_g = jax.nn.sigmoid(oo)
+            m_new = jnp.maximum(log_f + m, log_i)
+            i_p = jnp.exp(log_i - m_new)
+            f_p = jnp.exp(log_f + m - m_new)
+            c = f_p * c + i_p * z_g
+            n = f_p * n + i_p
+            h_new = (o_g * (c / jnp.maximum(n, 1e-6))).astype(pre_t.dtype)
+            return (h_new, c, n, m_new), h
+
+        (h_last, c_l, n_l, m_l), hs = lax.scan(
+            step, (h0, c0, n0, m0), pre.swapaxes(0, 1)
+        )
+        # hs[t] = h_{t-1} (input state at step t) — the recurrent activation.
+        h_prev = hs.swapaxes(0, 1)  # (B, T, d)
+        if self.dp and ctx.collect:
+            ctx.record_act("wr@out", h_prev)
+        # outputs h_t: shift: h_1..h_T = hs[1:] + h_last
+        y = jnp.concatenate([h_prev[:, 1:], h_last[:, None]], axis=1)
+        y = self.out_norm(params["out_norm"], y, ctx.scope("out_norm"))
+        x = res + y
+        x = x + self.ffn(params["ffn"], self.ffn_norm(params["ffn_norm"], x, ctx.scope("ffn_norm")), ctx.scope("ffn"))
+
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv": new_conv, "h": h_last, "c": c_l, "n": n_l, "m": m_l}
+        return x, new_cache
+
+    def init_cache(self, batch: int, dtype) -> dict:
+        d = self.d_model
+        return {
+            "conv": jnp.zeros((batch, self.conv_k - 1, d), dtype),
+            "h": jnp.zeros((batch, d), dtype),
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32),
+        }

@@ -1,0 +1,15 @@
+from repro.optim.optimizers import sgd, adam, adamw, apply_updates, Optimizer
+from repro.optim.schedules import constant, warmup_cosine, warmup_linear
+from repro.optim.compression import bf16_compress_with_error_feedback
+
+__all__ = [
+    "sgd",
+    "adam",
+    "adamw",
+    "apply_updates",
+    "Optimizer",
+    "constant",
+    "warmup_cosine",
+    "warmup_linear",
+    "bf16_compress_with_error_feedback",
+]

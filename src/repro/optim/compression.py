@@ -1,0 +1,41 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+On a real fleet the cross-pod gradient all-reduce is the DCN bottleneck;
+reducing in bf16 halves that traffic.  Error feedback (Karimireddy et al.
+2019) keeps an fp32 residual of what compression dropped and re-injects it the
+next step, preserving convergence.  DP interacts favorably: the injected
+Gaussian noise floor (sigma*R per coordinate) dominates bf16 rounding error,
+so compression is effectively free under DP (§Perf discusses).
+
+Usage: wrap the gradient before the optimizer update:
+    comp, ef_state = bf16_compress_with_error_feedback(grads, ef_state)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def bf16_compress_with_error_feedback(
+    grads: Any, ef_state: Optional[Any] = None
+) -> tuple[Any, Any]:
+    """Returns (bf16-rounded grads in fp32, new error-feedback state)."""
+    if ef_state is None:
+        ef_state = init_error_feedback(grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        compressed = corrected.astype(jnp.bfloat16)
+        new_e = corrected - compressed.astype(jnp.float32)
+        return compressed.astype(jnp.float32), new_e
+
+    pairs = jax.tree_util.tree_map(one, grads, ef_state)
+    comp = jax.tree_util.tree_map(lambda x: x[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    ef = jax.tree_util.tree_map(lambda x: x[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return comp, ef

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_linear(lr: float, warmup: int, total: int):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        decay = jnp.maximum(0.0, (total - s) / jnp.maximum(total - warmup, 1))
+        return lr * jnp.where(s < warmup, warm, decay)
+
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * jnp.where(s < warmup, warm, cos)
+
+    return fn

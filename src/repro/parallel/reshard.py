@@ -1,0 +1,110 @@
+"""Explicit FSDP weight gathering (the ZeRO-3 compute pattern).
+
+Parameters are stored sharded over the fsdp axes (data[, pod]) — that's the
+optimizer-state win — but COMPUTE must see them gathered, with activations
+staying batch-sharded.  Left to itself, GSPMD sometimes prefers the dual
+plan: keep the weight sharded, replicate the *batch*, and all-reduce the
+activations — catastrophically worse (measured: 59 GB of f32[256,4096,*]
+all-reduces per layer on yi-6b before this fix; see EXPERIMENTS.md §Perf).
+
+``reshard_param(w, axes)`` pins the intended plan: a sharding constraint that
+drops the fsdp axes (=> one all-gather of the bf16 weight per use, freed
+after the layer) and keeps the tensor-parallel axes.  In the backward pass
+the transpose turns into a reduce-scatter of the weight gradient — exactly
+FSDP semantics.  Callers cast to the compute dtype FIRST so the gather moves
+bf16, not fp32.
+
+Activated via ``use_reshard_rules(mesh, cfg)`` around tracing/lowering; a
+no-op otherwise (single-host smoke tests never notice).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import axis_size, logical_rules, mesh_axes
+
+_STATE: contextvars.ContextVar[Optional[tuple]] = contextvars.ContextVar(
+    "reshard_rules", default=None
+)
+
+
+@contextlib.contextmanager
+def use_reshard_rules(mesh: Mesh, cfg=None):
+    rules = logical_rules(mesh, cfg)
+    fsdp = set(mesh_axes(mesh)["fsdp"])
+    token = _STATE.set((mesh, rules, fsdp))
+    try:
+        yield
+    finally:
+        _STATE.reset(token)
+
+
+def reshard_param(w: jax.Array, axes: tuple) -> jax.Array:
+    """Constrain a parameter to its compute sharding (fsdp axes gathered)."""
+    state = _STATE.get()
+    if state is None:
+        return w
+    mesh, rules, fsdp = state
+    entries = []
+    for dim, logical in zip(w.shape, axes):
+        target = tuple(a for a in rules.get(logical, ()) if a not in fsdp)
+        if target and dim % axis_size(mesh, target) == 0:
+            entries.append(target if len(target) > 1 else target[0])
+        else:
+            entries.append(None)
+    return jax.lax.with_sharding_constraint(
+        w, NamedSharding(mesh, P(*entries))
+    )
+
+
+def shard_seq(x: jax.Array) -> jax.Array:
+    """Sequence-parallel sharding constraint for a (B, T, d) activation.
+
+    Applied to the layer-scan carry: the activation-checkpoint residuals
+    (the dominant train-memory term on TP models — 86 GB on qwen2-72b) are
+    then stored sharded T/model_size per device; GSPMD re-gathers the
+    sequence just-in-time inside each layer (Korthikanti et al. 2022).
+    No-op for dp_only models (model axis already carries batch) and when T
+    does not divide.
+    """
+    state = _STATE.get()
+    if state is None or x.ndim != 3:
+        return x
+    mesh, rules, fsdp = state
+    model = tuple(a for a in rules.get("mlp", ()) if a == "model")
+    if not model or x.shape[1] % axis_size(mesh, model) != 0:
+        return x
+    batch_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    spec = [None, "model", None]
+    if batch_ax and x.shape[0] % axis_size(mesh, batch_ax) == 0:
+        spec[0] = batch_ax if len(batch_ax) > 1 else batch_ax[0]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def shard_heads(x: jax.Array, axis: int = 2) -> jax.Array:
+    """Constrain a (B, T, H, d) tensor's head dim onto the model axis.
+
+    The SSM path builds q/k by broadcasting shared (B, T, d_state) streams
+    over heads — replicated — while v comes from a TP-sharded projection;
+    GSPMD then reshards back and forth every chunk (jamba: 727 all-gathers +
+    210 permutes per layer-pass). Pinning heads onto the model axis keeps
+    the whole scan local.
+    """
+    state = _STATE.get()
+    if state is None or x.ndim <= axis:
+        return x
+    mesh, rules, fsdp = state
+    model = tuple(a for a in rules.get("heads", ()) if a == "model")
+    if not model or x.shape[axis] % axis_size(mesh, model) != 0:
+        return x
+    batch_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    spec = [None] * x.ndim
+    spec[axis] = "model"
+    if batch_ax and x.shape[0] % axis_size(mesh, batch_ax) == 0:
+        spec[0] = batch_ax if len(batch_ax) > 1 else batch_ax[0]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

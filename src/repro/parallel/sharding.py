@@ -1,0 +1,202 @@
+"""Logical-axis -> mesh-axis resolution (DP / FSDP / TP / EP / SP / pod).
+
+Parallelism layout:
+- batch dims shard over (pod, data)          — data parallelism
+- "embed" (d_model dims of weights) shards over (pod, data) — FSDP: optimizer
+  state and parameters are fully sharded; GSPMD inserts the all-gathers
+- "mlp"/"heads"/"kv_heads"/"vocab" shard over model — tensor parallelism
+- "expert" shards over model when E % model_size == 0 (expert parallelism),
+  otherwise experts replicate and "moe_mlp" takes the model axis (TP inside
+  each expert)
+- long KV caches shard their sequence dim over model — context parallelism
+  for decode (see Attention._blocked_decode)
+
+Every rule is guarded by divisibility: a dim that does not divide evenly on
+its target axes falls back to replication (never padded shardings), so odd
+head counts (whisper's 20) and vocab sizes (51866) stay correct.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def mesh_axes(mesh: Mesh, cfg: Optional[ArchConfig] = None) -> dict[str, Any]:
+    names = mesh.axis_names
+    dp_only = cfg is not None and getattr(cfg, "parallelism", "tp") == "dp_only"
+    if dp_only:
+        # batch spans every axis; params stay FSDP over (pod, data) only —
+        # a 256-way fsdp sharding made GSPMD fall back to "involuntary full
+        # rematerialization" when gathering (measured: 12x worse, see
+        # EXPERIMENTS.md §Perf iteration 3)
+        batch_axes = tuple(a for a in ("pod", "data", "model") if a in names)
+        fsdp_axes = tuple(a for a in ("pod", "data") if a in names)
+        return {"batch": batch_axes, "fsdp": fsdp_axes, "model": ()}
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    return {
+        "batch": batch_axes,
+        "fsdp": batch_axes,
+        "model": ("model",) if "model" in names else (),
+    }
+
+
+def axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def logical_rules(mesh: Mesh, cfg: Optional[ArchConfig] = None) -> dict[str, tuple]:
+    ax = mesh_axes(mesh, cfg)
+    model = ax["model"]
+    rules = {
+        "embed": ax["fsdp"],
+        "mlp": model,
+        "heads": model,
+        "kv_heads": model,
+        "vocab": model,
+        "stack": (),
+        None: (),
+    }
+    if cfg is not None and cfg.moe_experts:
+        if cfg.moe_experts % max(axis_size(mesh, model), 1) == 0:
+            rules["expert"] = model
+            rules["moe_mlp"] = ax["fsdp"]  # shard expert d_ff over fsdp axes
+        else:
+            rules["expert"] = ()
+            rules["moe_mlp"] = model
+    else:
+        rules["expert"] = ()
+        rules["moe_mlp"] = model
+    return rules
+
+
+def _spec_for(shape: tuple[int, ...], axes: tuple, rules: dict, mesh: Mesh) -> P:
+    entries = []
+    used: set[str] = set()
+    for dim, logical in zip(shape, axes):
+        target = tuple(a for a in rules.get(logical, ()) if a not in used)
+        # longest divisible prefix (e.g. batch 256 on a 512-chip multi-pod
+        # dp_only mesh falls back to (pod, data))
+        while target and dim % axis_size(mesh, target) != 0:
+            target = target[:-1]
+        if target:
+            entries.append(target if len(target) > 1 else target[0])
+            used.update(target)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def param_shardings(model, mesh: Mesh, cfg: Optional[ArchConfig] = None) -> Any:
+    """NamedSharding tree for model params from the module's logical axes."""
+    rules = logical_rules(mesh, cfg)
+    axes_tree = model.axes()
+    abstract = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+    is_axes_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+
+    def resolve(ax, leaf):
+        assert len(ax) == len(leaf.shape), f"axes {ax} vs shape {leaf.shape}"
+        return NamedSharding(mesh, _spec_for(leaf.shape, ax, rules, mesh))
+
+    return jax.tree_util.tree_map(resolve, axes_tree, abstract, is_leaf=is_axes_leaf)
+
+
+def batch_shardings(specs: Any, mesh: Mesh, cfg: Optional[ArchConfig] = None) -> Any:
+    """Inputs: shard dim 0 (batch) over the data axes (longest divisible prefix)."""
+    ax_full = mesh_axes(mesh, cfg)["batch"]
+
+    def one(sp):
+        ax = ax_full
+        while ax and (not sp.shape or sp.shape[0] % axis_size(mesh, ax) != 0):
+            ax = ax[:-1]
+        if ax:
+            return NamedSharding(mesh, P(ax if len(ax) > 1 else ax[0]))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(one, specs)
+
+
+def state_shardings(model, mesh: Mesh, cfg: ArchConfig, abstract_state: Any) -> Any:
+    """Train-state sharding: params + mirrored optimizer moments; rest replicated."""
+    p_shard = param_shardings(model, mesh, cfg)
+    out = {}
+    for k, v in abstract_state.items():
+        if k == "params":
+            out[k] = p_shard
+        elif k == "opt" and isinstance(v, dict):
+            # optimizer moments ("m"/"v") mirror the param tree sharding
+            out[k] = {kk: mirror_tree(p_shard, vv) for kk, vv in v.items()}
+        else:
+            out[k] = jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), v)
+    return out
+
+
+def mirror_tree(p_shard: Any, moment_tree: Any) -> Any:
+    return jax.tree_util.tree_map(lambda s, _: s, p_shard, moment_tree)
+
+
+def serve_state_shardings(
+    mesh: Mesh, cfg: ArchConfig, abstract_state: Any, batch_size: int
+) -> Any:
+    """Serve-state sharding by leaf-path heuristics (divisibility-guarded):
+
+    KV caches (..., B, S, K, hd): batch over (pod,data); S over model when the
+    cache is long (context parallelism for decode), else K over model.
+    SSM states (..., B, H, dk, dv): batch over (pod,data), H over model.
+    """
+    ax = mesh_axes(mesh, cfg)
+    batch_ax_full, model_ax = ax["batch"], ax["model"]
+    if not model_ax and "model" in mesh.axis_names:
+        model_ax = ("model",)  # dp_only: long caches may still CP over model
+    nm = axis_size(mesh, model_ax)
+
+    def one(path: str, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if not shape:
+            return NamedSharding(mesh, P())
+        batch_ax = batch_ax_full
+        while batch_ax and batch_size % axis_size(mesh, batch_ax) != 0:
+            batch_ax = batch_ax[:-1]
+        nb = axis_size(mesh, batch_ax)
+        # batch dim identified by value (stack dims precede it)
+        bdim = None
+        for i, s in enumerate(shape[: min(3, len(shape))]):
+            if s == batch_size and nb > 1:
+                bdim = i
+                break
+        if bdim is not None and nb > 1:
+            spec[bdim] = batch_ax if len(batch_ax) > 1 else batch_ax[0]
+        model_free = not (bdim is not None and "model" in (
+            spec[bdim] if isinstance(spec[bdim], tuple) else (spec[bdim],)))
+        is_kv = path.endswith("/k") or path.endswith("/v")
+        if model_free and is_kv and len(shape) >= 4:
+            sdim = len(shape) - 3  # (..., S, K, hd)
+            if sdim != bdim and shape[sdim] >= 32768 and shape[sdim] % nm == 0 and nm > 1:
+                spec[sdim] = "model"
+            elif (
+                len(shape) - 2 != bdim
+                and shape[len(shape) - 2] % nm == 0
+                and nm > 1
+            ):
+                spec[len(shape) - 2] = "model"
+        elif model_free and path.endswith("ssm") and len(shape) >= 4:
+            hdim = len(shape) - 3
+            if hdim != bdim and shape[hdim] % nm == 0 and nm > 1:
+                spec[hdim] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    from repro.utils.tree import tree_map_with_path_str
+
+    return tree_map_with_path_str(one, abstract_state)

@@ -1,0 +1,4 @@
+from repro.runtime.fault import StepWatchdog, PreemptionHandler, retry
+from repro.runtime.elastic import elastic_plan
+
+__all__ = ["StepWatchdog", "PreemptionHandler", "retry", "elastic_plan"]

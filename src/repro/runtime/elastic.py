@@ -1,0 +1,52 @@
+"""Elastic scaling: recompute the run layout when the fleet size changes.
+
+Checkpoints store logical arrays (see checkpoint/), so a restart on a
+different mesh only needs (a) new shardings, (b) a data layout that keeps the
+*logical* batch (and therefore the DP sampling rate q — the privacy
+accounting is unchanged) while re-splitting it across the surviving hosts.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.utils.logging import get_logger
+
+log = get_logger("elastic")
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    data_shards: int
+    per_shard_batch: int
+    accumulation_steps: int
+    note: str
+
+
+def elastic_plan(
+    *, logical_batch: int, data_shards: int, max_per_shard: int
+) -> ElasticPlan:
+    """Keep the logical batch constant; grow accumulation when shards shrink.
+
+    DP invariant: sampling rate q = logical_batch / N must not change across
+    restarts, else the accountant's composition is wrong.  So the logical
+    batch is held fixed and the lost throughput is absorbed by gradient
+    accumulation (the paper's virtual-step machinery).
+    """
+    assert logical_batch % data_shards == 0, (
+        f"logical batch {logical_batch} must divide over {data_shards} shards; "
+        "choose a shard count that divides it"
+    )
+    per_shard = logical_batch // data_shards
+    accum = 1
+    while per_shard > max_per_shard:
+        accum *= 2
+        assert per_shard % 2 == 0
+        per_shard //= 2
+    plan = ElasticPlan(
+        data_shards=data_shards,
+        per_shard_batch=per_shard,
+        accumulation_steps=accum,
+        note=f"logical batch {logical_batch} preserved; q unchanged",
+    )
+    log.info("elastic plan: %s", plan)
+    return plan

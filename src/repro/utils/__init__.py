@@ -1,0 +1,19 @@
+from repro.utils.tree import (
+    tree_size,
+    tree_bytes,
+    tree_zeros_like,
+    tree_map_with_path_str,
+    flatten_dict,
+    unflatten_dict,
+)
+from repro.utils.logging import get_logger
+
+__all__ = [
+    "tree_size",
+    "tree_bytes",
+    "tree_zeros_like",
+    "tree_map_with_path_str",
+    "flatten_dict",
+    "unflatten_dict",
+    "get_logger",
+]

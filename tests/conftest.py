@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device (the dry-run
+# sets its own 512-device flag inside launch/dryrun.py only).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,21 @@
+"""Shared test utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def max_tree_diff(a, b) -> float:
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+def lm_batch(key, batch, seq, vocab):
+    k1, k2 = jax.random.split(key)
+    return {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, vocab, dtype=jnp.int32),
+        "labels": jax.random.randint(k2, (batch, seq), 0, vocab, dtype=jnp.int32),
+        "mask": jnp.ones((batch,), jnp.float32),
+    }

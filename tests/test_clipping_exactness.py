@@ -1,0 +1,224 @@
+"""The paper's central correctness claim (Sec. 2.1): mixed ghost clipping is
+*exactly* the same mechanism as per-sample-gradient clipping — only cheaper.
+
+Every mode must produce the same per-sample norms and the same clipped
+gradient sum as the vmap(grad) oracle, across every layer family the
+framework supports.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.clipping import (
+    ClipConfig,
+    discover_meta,
+    dp_value_and_clipped_grad,
+    validate_coverage,
+)
+from repro.core.taps import Ctx
+from repro.nn.attention import Attention
+from repro.nn.conv import Conv2d, global_avg_pool
+from repro.nn.mamba import MambaBlock
+from repro.nn.mlp import GatedMLP
+from repro.nn.module import Dense, Embedding, GroupNorm, LayerNorm, Module, RMSNorm
+from repro.nn.moe import MoE
+from repro.nn.stack import ScannedStack
+from repro.nn.xlstm import MLSTMBlock, SLSTMBlock
+
+from helpers import lm_batch, max_tree_diff
+
+MODES = ["ghost", "fastgradclip", "mixed_ghost", "bk_mixed"]
+
+
+def _run_all_modes(loss_with_ctx, params, batch, clip_norm=0.3):
+    out = {}
+    for mode in ["vmap"] + MODES:
+        fn = jax.jit(
+            dp_value_and_clipped_grad(loss_with_ctx, ClipConfig(mode=mode, clip_norm=clip_norm))
+        )
+        out[mode] = fn(params, batch)
+    return out
+
+
+def _assert_matches(results, tol=5e-5):
+    ref_loss, ref_g, ref_aux = results["vmap"]
+    scale = max(float(jnp.max(ref_aux["per_sample_norms"])), 1.0)
+    for mode in MODES:
+        loss, g, aux = results[mode]
+        assert jnp.allclose(loss, ref_loss, rtol=1e-5), mode
+        nerr = float(jnp.max(jnp.abs(aux["per_sample_norms"] - ref_aux["per_sample_norms"])))
+        assert nerr / scale < tol, (mode, nerr, scale)
+        gerr = max_tree_diff(ref_g, g)
+        assert gerr < tol, (mode, gerr)
+
+
+class _MLPModel:
+    def __init__(self, vocab=17, d=8, f=12, key=jax.random.PRNGKey(0)):
+        self.emb = Embedding("emb", vocab, d)
+        self.l1 = Dense("l1", d, f, use_bias=True)
+        self.norm = RMSNorm("n", f)
+        self.l2 = Dense("l2", f, vocab, use_bias=False)
+        ks = jax.random.split(key, 4)
+        self.params = {
+            "emb": self.emb.init(ks[0]), "l1": self.l1.init(ks[1]),
+            "n": self.norm.init(ks[2]), "l2": self.l2.init(ks[3]),
+        }
+
+    def loss_with_ctx(self, params, batch, ctx):
+        x = self.emb(params["emb"], batch["tokens"], ctx.scope("emb"))
+        h = jax.nn.gelu(self.l1(params["l1"], x, ctx.scope("l1")))
+        h = self.norm(params["n"], h, ctx.scope("n"))
+        logits = self.l2(params["l2"], h, ctx.scope("l2"))
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+        nll = nll * batch["mask"][:, None]
+        return jnp.mean(nll, axis=-1)
+
+
+def test_dense_embedding_norm_exactness():
+    m = _MLPModel()
+    batch = lm_batch(jax.random.PRNGKey(1), 4, 6, 17)
+    _assert_matches(_run_all_modes(m.loss_with_ctx, m.params, batch))
+
+
+def test_poisson_mask_zeroes_contributions():
+    m = _MLPModel()
+    batch = lm_batch(jax.random.PRNGKey(1), 4, 6, 17)
+    batch["mask"] = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    res = _run_all_modes(m.loss_with_ctx, m.params, batch)
+    _assert_matches(res)
+    # masked samples must have zero clip factor
+    _, _, aux = res["mixed_ghost"]
+    assert float(aux["clip_factors"][1]) == 0.0
+    assert float(aux["clip_factors"][3]) == 0.0
+
+
+def test_coverage_validation_catches_untapped_params():
+    m = _MLPModel()
+    batch = lm_batch(jax.random.PRNGKey(1), 2, 4, 17)
+
+    def leaky_loss(params, b, ctx):
+        # l1 applied WITHOUT dp taps (dp disabled via Ctx.disabled scope hack)
+        x = m.emb(params["emb"], b["tokens"], ctx.scope("emb"))
+        h = jax.nn.gelu(m.l1(params["l1"], x, Ctx.disabled()))
+        h = m.norm(params["n"], h, ctx.scope("n"))
+        logits = m.l2(params["l2"], h, ctx.scope("l2"))
+        return jnp.mean(logits, axis=(1, 2))
+
+    meta = discover_meta(leaky_loss, m.params, batch)
+    missing = validate_coverage(meta, m.params)
+    assert "l1/w" in missing and "l1/b" in missing
+
+
+def test_conv2d_exactness():
+    gn = GroupNorm("gn", 8, groups=4)
+    c1 = Conv2d("c1", 3, 8, (3, 3), padding="SAME")
+    c2 = Conv2d("c2", 8, 8, (3, 3), strides=(2, 2), padding="SAME")
+    head = Dense("head", 8, 10)
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    params = {"c1": c1.init(ks[0]), "gn": gn.init(ks[1]), "c2": c2.init(ks[2]),
+              "head": head.init(ks[3])}
+
+    def loss(params, batch, ctx):
+        h = c1(params["c1"], batch["image"], ctx.scope("c1"))
+        h = jax.nn.relu(gn(params["gn"], h, ctx.scope("gn")))
+        h = c2(params["c2"], h, ctx.scope("c2"))
+        h = global_avg_pool(h)
+        logits = head(params["head"], h[:, None, :], ctx.scope("head"))[:, 0]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+
+    batch = {
+        "image": jax.random.normal(jax.random.PRNGKey(4), (4, 10, 10, 3)),
+        "y": jax.random.randint(jax.random.PRNGKey(5), (4,), 0, 10),
+    }
+    _assert_matches(_run_all_modes(loss, params, batch))
+
+
+class _StackModel(Module):
+    def __init__(self):
+        d = 16
+        self.d = d
+
+        class Block(Module):
+            def __init__(self):
+                self.n1 = RMSNorm("n1", d)
+                self.attn = Attention("attn", d, 4, 2, block_q=4, block_kv=4)
+                self.n2 = RMSNorm("n2", d)
+                self.moe = MoE("moe", d, 20, n_experts=4, top_k=2)
+
+            def init(self, key):
+                ks = jax.random.split(key, 4)
+                return {"n1": self.n1.init(ks[0]), "attn": self.attn.init(ks[1]),
+                        "n2": self.n2.init(ks[2]), "moe": self.moe.init(ks[3])}
+
+            def __call__(self, params, x, ctx, cache=None, **kw):
+                h, _ = self.attn(params["attn"], self.n1(params["n1"], x, ctx.scope("n1")),
+                                 ctx.scope("attn"))
+                x = x + h
+                x = x + self.moe(params["moe"], self.n2(params["n2"], x, ctx.scope("n2")),
+                                 ctx.scope("moe"))
+                return x, cache
+
+        self.emb = Embedding("emb", 13, d)
+        self.stack = ScannedStack("layers", Block(), 2, remat=True)
+        self.head = Dense("head", d, 13, use_bias=False)
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        self.params = {"emb": self.emb.init(ks[0]), "layers": self.stack.init(ks[1]),
+                       "head": self.head.init(ks[2])}
+
+    def loss_with_ctx(self, params, batch, ctx):
+        x = self.emb(params["emb"], batch["tokens"], ctx.scope("emb"))
+        x, _ = self.stack(params["layers"], x, ctx.scope("layers"))
+        logits = self.head(params["head"], x, ctx.scope("head"))
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+        return jnp.mean(nll, axis=-1)
+
+
+def test_scanned_stack_attention_moe_exactness():
+    m = _StackModel()
+    batch = lm_batch(jax.random.PRNGKey(1), 3, 6, 13)
+    _assert_matches(_run_all_modes(m.loss_with_ctx, m.params, batch))
+
+
+def test_ssm_blocks_exactness():
+    d, v = 8, 11
+    mamba = MambaBlock("m", d, expand=2, head_dim=4, d_state=4, chunk=4)
+    mls = MLSTMBlock("ml", d, n_heads=2, chunk=4)
+    sls = SLSTMBlock("sl", d, n_heads=2)
+    emb = Embedding("emb", v, d)
+    head = Dense("head", d, v, use_bias=False)
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    params = {"emb": emb.init(ks[0]), "mamba": mamba.init(ks[1]),
+              "mlstm": mls.init(ks[2]), "slstm": sls.init(ks[3]),
+              "head": head.init(ks[4])}
+
+    def loss(params, batch, ctx):
+        x = emb(params["emb"], batch["tokens"], ctx.scope("emb"))
+        h, _ = mamba(params["mamba"], x, ctx.scope("mamba"))
+        x = x + h
+        x, _ = mls(params["mlstm"], x, ctx.scope("mlstm"))
+        x, _ = sls(params["slstm"], x, ctx.scope("slstm"))
+        logits = head(params["head"], x, ctx.scope("head"))
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+        return jnp.mean(nll, axis=-1)
+
+    batch = lm_batch(jax.random.PRNGKey(1), 3, 7, v)
+    meta = discover_meta(loss, params, batch)
+    assert not validate_coverage(meta, params)
+    _assert_matches(_run_all_modes(loss, params, batch))
+
+
+def test_decision_modes_agree_on_gradients_not_costs():
+    """ghost vs instantiate pick different branches but identical results."""
+    m = _MLPModel()
+    batch = lm_batch(jax.random.PRNGKey(2), 4, 6, 17)
+    meta = discover_meta(m.loss_with_ctx, m.params, batch)
+    from repro.core.decision import decide
+
+    branches_space = {k: decide(v, mode="mixed_ghost", by="space") for k, v in meta.items()}
+    branches_time = {k: decide(v, mode="mixed_ghost", by="time") for k, v in meta.items()}
+    assert set(branches_space.values()) <= {"ghost", "instantiate"}
+    assert set(branches_time.values()) <= {"ghost", "instantiate"}

@@ -1,0 +1,75 @@
+"""Reproduce the paper's Table 3: VGG-11 / ImageNet layerwise decision.
+
+The complexity model must produce the paper's exact per-layer space costs
+(ghost: 2*T^2, non-ghost: p*d*kh*kw) and pick the same green cells.
+"""
+import pytest
+
+from repro.core.decision import ghost_is_cheaper
+
+# (name, T=HoutWout, d_in, p_out, k)  — VGG-11 at 224x224, conv 3x3 / fc
+VGG11_LAYERS = [
+    ("conv1", 224 * 224, 3, 64, 3),
+    ("conv2", 112 * 112, 64, 128, 3),
+    ("conv3", 56 * 56, 128, 256, 3),
+    ("conv4", 56 * 56, 256, 256, 3),
+    ("conv5", 28 * 28, 256, 512, 3),
+    ("conv6", 28 * 28, 512, 512, 3),
+    ("conv7", 14 * 14, 512, 512, 3),
+    ("conv8", 14 * 14, 512, 512, 3),
+    ("fc9", 1, 512 * 7 * 7, 4096, 1),
+    ("fc10", 1, 4096, 4096, 1),
+    ("fc11", 1, 4096, 1000, 1),
+]
+
+# Paper Table 3 values (space complexity of each branch)
+PAPER_TABLE3 = {
+    "conv1": (5.0e9, 1.7e3),
+    "conv2": (3.0e8, 7.3e4),
+    "conv3": (2.0e7, 2.9e5),
+    "conv4": (2.0e7, 5.8e5),
+    "conv5": (1.2e6, 1.1e6),
+    "conv6": (1.2e6, 2.3e6),
+    "conv7": (7.6e4, 2.3e6),
+    "conv8": (7.6e4, 2.3e6),
+    "fc9": (2.0, 1.0e8),
+    "fc10": (2.0, 1.6e7),
+    "fc11": (2.0, 4.1e6),
+}
+
+# Eq (4.1) ground truth: ghost iff 2T^2 < p*d*k^2.  conv5 is the borderline
+# instantiate case (1.23e6 > 1.18e6); conv6 flips to ghost (1.23e6 < 2.36e6).
+PAPER_GHOST_SELECTED = {"conv6", "conv7", "conv8", "fc9", "fc10", "fc11"}
+
+
+@pytest.mark.parametrize("name,t,d,p,k", VGG11_LAYERS)
+def test_table3_values(name, t, d, p, k):
+    ghost_cost = 2.0 * t * t
+    nonghost_cost = p * d * k * k
+    want_ghost, want_nonghost = PAPER_TABLE3[name]
+    assert abs(ghost_cost - want_ghost) / want_ghost < 0.15, (name, ghost_cost)
+    assert abs(nonghost_cost - want_nonghost) / want_nonghost < 0.15, (name, nonghost_cost)
+
+
+@pytest.mark.parametrize("name,t,d,p,k", VGG11_LAYERS)
+def test_table3_selection(name, t, d, p, k):
+    picked_ghost = ghost_is_cheaper(t, d * k * k, p, by="space")
+    assert picked_ghost == (name in PAPER_GHOST_SELECTED), name
+
+
+def test_total_mixed_cost_below_both_pure_strategies():
+    """Paper totals: ghost-only 5.34e9, nonghost 1.33e8, mixed "3.40e4".
+
+    Note: summing the paper's own per-layer minima gives ~3.4e6, so the
+    printed 3.40e4 appears to be a typo for 3.40e6 (recorded in
+    EXPERIMENTS.md).  We assert the arithmetic truth.
+    """
+    ghost_total = sum(2.0 * t * t for _, t, d, p, k in VGG11_LAYERS)
+    nonghost_total = sum(p * d * k * k for _, t, d, p, k in VGG11_LAYERS)
+    mixed_total = sum(
+        min(2.0 * t * t, p * d * k * k) for _, t, d, p, k in VGG11_LAYERS
+    )
+    assert abs(ghost_total - 5.34e9) / 5.34e9 < 0.05
+    assert abs(nonghost_total - 1.33e8) / 1.33e8 < 0.10
+    assert abs(mixed_total - 3.40e6) / 3.40e6 < 0.15
+    assert mixed_total < ghost_total and mixed_total < nonghost_total

@@ -1,0 +1,77 @@
+"""Distribution tests on 8 fake CPU devices (subprocess: device count is
+locked at first jax init, so the main test process can't host these)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh, AxisType
+
+    from repro.configs.registry import build_model, get_arch
+    from repro.launch.specs import train_batch_specs, materialize
+    from repro.launch.steps import (DPTrainConfig, make_train_state,
+                                    make_train_step, abstract_train_state)
+    from repro.optim import adam, warmup_cosine
+    from repro.parallel.sharding import batch_shardings, state_shardings
+    from repro.configs.base import ShapeConfig
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    cfg = get_arch("mixtral-8x7b").reduced()
+    model = build_model(cfg)
+    opt = adam()
+    shape = ShapeConfig("t", 16, 4, "train")
+
+    step = make_train_step(model, opt, warmup_cosine(1e-3, 2, 10),
+                           DPTrainConfig(logical_batch=4))
+    state = make_train_state(model, jax.random.PRNGKey(0), opt)
+    st_sh = state_shardings(model, mesh, cfg, jax.eval_shape(lambda: state))
+    state = jax.tree_util.tree_map(jax.device_put, state, st_sh)
+    specs = train_batch_specs(cfg, shape, 4)
+    batch = materialize(specs, jax.random.PRNGKey(1), vocab=cfg.vocab)
+    b_sh = batch_shardings(specs, mesh)
+    batch = jax.tree_util.tree_map(jax.device_put, batch, b_sh)
+
+    jit_step = jax.jit(step, in_shardings=(st_sh, b_sh),
+                       out_shardings=(st_sh, None))
+    state2, metrics = jit_step(state, batch)
+    loss1 = float(metrics["loss"])
+
+    # single-device reference must agree (SPMD correctness)
+    ref_step = jax.jit(step)
+    host_state = jax.tree_util.tree_map(
+        lambda x: jax.device_put(jax.device_get(x), jax.devices()[0]),
+        make_train_state(model, jax.random.PRNGKey(0), opt))
+    host_batch = jax.tree_util.tree_map(
+        lambda x: jax.device_put(jax.device_get(x), jax.devices()[0]), batch)
+    _, ref_metrics = ref_step(host_state, host_batch)
+    print(json.dumps({
+        "loss_sharded": loss1,
+        "loss_ref": float(ref_metrics["loss"]),
+        "nan": bool(any(jnp.any(jnp.isnan(x))
+                    for x in jax.tree_util.tree_leaves(state2["params"]))),
+    }))
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert not res["nan"]
+    assert abs(res["loss_sharded"] - res["loss_ref"]) < 5e-4, res
