@@ -2,10 +2,16 @@
 """Benchmark harness: one module per paper table/figure + the roofline report.
 
     PYTHONPATH=src python -m benchmarks.run [--only table4,table7] [--fast]
+
+Each benchmark also writes a machine-readable ``BENCH_<name>.json`` (list of
+{name, us_per_call, derived} rows) under --out-dir, so the perf trajectory
+can accumulate across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -15,6 +21,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma list of benchmark names")
     ap.add_argument("--fast", action="store_true", help="smaller sweeps")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for the BENCH_<name>.json artifacts")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -40,17 +48,32 @@ def main() -> None:
         keep = set(args.only.split(","))
         benches = {k: v for k, v in benches.items() if k in keep}
 
+    os.makedirs(args.out_dir, exist_ok=True)
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in benches.items():
         t0 = time.time()
+        rows = []
         try:
             for row_name, us, derived in fn():
                 print(f"{row_name},{us:.1f},{derived}")
+                rows.append(
+                    {"name": row_name, "us_per_call": us, "derived": str(derived)}
+                )
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},0.0,FAILED", file=sys.stderr)
             traceback.print_exc()
+            # a stale artifact from an earlier healthy run would mask the
+            # regression — remove it so the trajectory shows the gap
+            stale = os.path.join(args.out_dir, f"BENCH_{name}.json")
+            if os.path.exists(stale):
+                os.remove(stale)
+        else:
+            path = os.path.join(args.out_dir, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump(rows, f, indent=2)
+            print(f"# wrote {path}", file=sys.stderr)
         print(f"# {name} finished in {time.time()-t0:.1f}s", file=sys.stderr)
     if failures:
         raise SystemExit(1)

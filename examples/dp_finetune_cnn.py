@@ -2,7 +2,17 @@
 mixed ghost clipping, and show the layerwise decision the engine made.
 
     PYTHONPATH=src python examples/dp_finetune_cnn.py
+
+Tuner quickstart: ``--tune`` replaces the analytic Eq-(4.1) decision with
+branches *measured* on this device (repro.tuner) and prints both, flagging
+taps where the hardware disagrees with the model.  The tuned ClipPlan is
+cached, so a second run skips profiling; ``--plan path.json`` pins the cache
+location.
+
+    PYTHONPATH=src python examples/dp_finetune_cnn.py --tune
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
@@ -12,6 +22,13 @@ from repro.core.engine import PrivacyEngine
 from repro.data.synthetic import synthetic_vision_batch
 from repro.models.cnn import VGG
 from repro.optim import adam, apply_updates
+from repro.tuner import MeasureConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--tune", action="store_true",
+                help="profile ghost vs instantiate per tap on this device")
+ap.add_argument("--plan", default=None, help="ClipPlan path (default: cache)")
+args = ap.parse_args()
 
 model = VGG("vgg11", n_classes=10)
 params = model.init(jax.random.PRNGKey(0))
@@ -35,11 +52,29 @@ engine.validate(params, batch_fn(0))
 
 # show the paper's Table-3-style layerwise decision for THIS model/input
 meta = discover_meta(model.loss_with_ctx, params, batch_fn(0))
-print("\nlayerwise decision (Eq 4.1):")
+
+measured = {}
+if args.tune:
+    # measured-cost autotuning: time both branches per tap on this device,
+    # search the max physical microbatch, cache the ClipPlan
+    plan = engine.tune(
+        params, batch_fn(0), arch="vgg11-cifar",
+        measure=MeasureConfig(repeats=3, warmup=1),
+        hi_cap=256,
+        plan_path=args.plan if args.plan else "auto",
+    )
+    measured = plan.branch_map()
+    print(f"\ntuned on {plan.device}: max physical batch = {plan.physical_batch}")
+
+print("\nlayerwise decision (Eq 4.1%s):" % (" vs measured" if measured else ""))
 for name, m in sorted(meta.items()):
     if m.kind == "matmul":
-        print(f"  {name:22s} T={m.T:5d} D={m.D:6d} p={m.p:5d} "
-              f"-> {decide(m, mode='mixed_ghost')}")
+        analytic = decide(m, mode="mixed_ghost")
+        line = (f"  {name:22s} T={m.T:5d} D={m.D:6d} p={m.p:5d} -> {analytic}")
+        if name in measured:
+            flip = "  <- flip" if measured[name] != analytic else ""
+            line += f"  (measured: {measured[name]}){flip}"
+        print(line)
 
 grad_fn = jax.jit(engine.clipped_grad_fn())
 opt = adam()

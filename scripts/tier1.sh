@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 smoke gate: the full pytest suite plus a fast benchmark pass that
+# exercises the complexity model (table1) and the Eq-4.1 decision (table3).
+#
+#   bash scripts/tier1.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+python -m pytest -x -q
+python -m benchmarks.run --fast --only table1,table3 --out-dir "${BENCH_OUT:-.}"

@@ -59,6 +59,18 @@ class ClipConfig:
     inst_block_d: int = 8192
     # taps whose params are frozen (no clipping/noise/coverage requirement)
     frozen_prefixes: tuple[str, ...] = ()
+    # measured-cost branch plan (repro.tuner.ClipPlan, duck-typed to keep
+    # core free of tuner imports).  Consulted before the analytic Eq-(4.1)
+    # rule; a plan whose device/shape fingerprint does not match the model
+    # is rejected at trace time and the analytic rule applies.
+    plan: Optional[Any] = None
+
+
+def _plan_overrides(plan: Optional[Any], meta: dict[str, TapMeta]) -> dict[str, str]:
+    """Validated per-tap branch overrides from a tuner plan ({} if stale)."""
+    if plan is None:
+        return {}
+    return plan.overrides_for(meta)
 
 
 def discover_meta(
@@ -173,14 +185,18 @@ def dp_value_and_clipped_grad(
 
     # --- fused ghost family (default): norms inside the backward pass -----
     if cfg.mode in ("ghost", "fastgradclip", "mixed_ghost"):
-        runtime = ClipRuntime(
+        base_runtime = ClipRuntime(
             mode=cfg.mode, decision_by=cfg.decision_by,
             ghost_block=cfg.ghost_block, inst_block_d=cfg.inst_block_d,
         )
 
         def fused_fn(params, batch):
             mask = _batch_mask(batch)
-            meta = discover_meta(loss_with_ctx, params, batch, clip=runtime)
+            meta = discover_meta(loss_with_ctx, params, batch, clip=base_runtime)
+            overrides = _plan_overrides(cfg.plan, meta)
+            runtime = dataclasses.replace(
+                base_runtime, overrides=tuple(sorted(overrides.items()))
+            )
             zs0 = {
                 name: jnp.zeros(m.stack_dims + (m.batch_size,), jnp.float32)
                 for name, m in meta.items() if m.fused
@@ -210,6 +226,7 @@ def dp_value_and_clipped_grad(
                         m, acts.get(name), gs_late[name],
                         mode=cfg.mode, decision_by=cfg.decision_by,
                         ghost_block=cfg.ghost_block, inst_block_d=cfg.inst_block_d,
+                        override=overrides.get(name),
                     )
             norms = jnp.sqrt(norms2)
             c = clip_fn(norms, cfg.clip_norm)
@@ -228,6 +245,7 @@ def dp_value_and_clipped_grad(
     def ghost_fn(params, batch):
         mask = _batch_mask(batch)
         meta = discover_meta(loss_with_ctx, params, batch)
+        overrides = _plan_overrides(cfg.plan, meta)
         taps0 = make_zero_taps(meta)
 
         def f(p, taps):
@@ -250,6 +268,7 @@ def dp_value_and_clipped_grad(
                 decision_by=cfg.decision_by,
                 ghost_block=cfg.ghost_block,
                 inst_block_d=cfg.inst_block_d,
+                override=overrides.get(name),
             )
         norms = jnp.sqrt(norms2)
         c = clip_fn(norms, cfg.clip_norm)

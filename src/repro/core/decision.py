@@ -6,6 +6,7 @@ B = batch, T = output positions, D = fan-in (d*kh*kw), p = fan-out.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.core.taps import TapMeta
 
@@ -47,12 +48,24 @@ def ghost_is_cheaper(T: int, D: int, p: int, *, by: str = "space") -> bool:
     return 2 * T * T < p * D
 
 
-def decide(meta: TapMeta, *, mode: str = "mixed_ghost", by: str = "space") -> str:
+def decide(
+    meta: TapMeta,
+    *,
+    mode: str = "mixed_ghost",
+    by: str = "space",
+    override: Optional[str] = None,
+) -> str:
     """Per-tap branch: 'ghost' | 'instantiate'.
 
     Non-matmul kinds have a forced branch: scale/bias/dw_conv per-sample grads
     are tiny (instantiate); embeddings always use the index-equality ghost
     norm (instantiating a (V, p) gradient per sample is never viable).
+
+    ``override`` is a measured-cost branch from a ``repro.tuner`` ClipPlan:
+    it wins over the analytic Eq-(4.1) rule (both branches compute the same
+    per-sample norm, so the choice is pure performance), but never over a
+    forced kind, and never over the pure reference modes ('ghost',
+    'fastgradclip'), whose whole point is a fixed branch everywhere.
     """
     if meta.kind == "embedding":
         return "ghost"
@@ -63,6 +76,10 @@ def decide(meta: TapMeta, *, mode: str = "mixed_ghost", by: str = "space") -> st
     if mode in ("instantiate", "fastgradclip"):
         return "instantiate"
     if mode in ("mixed_ghost", "bk_mixed"):
+        if override is not None:
+            if override not in ("ghost", "instantiate"):
+                raise ValueError(f"invalid branch override {override!r}")
+            return override
         return "ghost" if ghost_is_cheaper(meta.T, meta.D, meta.p, by=by) else "instantiate"
     raise ValueError(f"unknown clipping mode {mode!r}")
 

@@ -24,6 +24,9 @@ import jax.numpy as jnp
 from repro.core.accountant import RDPAccountant, compute_epsilon, find_noise_multiplier
 from repro.core.clipping import ClipConfig, dp_value_and_clipped_grad, discover_meta, validate_coverage
 from repro.core.noise import add_dp_noise
+from repro.utils.logging import get_logger
+
+log = get_logger("engine")
 
 
 @dataclasses.dataclass
@@ -40,6 +43,9 @@ class PrivacyEngine:
     mode: str = "mixed_ghost"  # paper: 'ghost-mixed'
     clip_fn: str = "abadi"
     frozen_prefixes: tuple[str, ...] = ()
+    # measured-cost branch plan (repro.tuner.ClipPlan); set directly, via
+    # use_plan(), or produced in place by tune()
+    plan: Optional[Any] = None
 
     def __post_init__(self):
         self.sampling_rate = self.batch_size / self.sample_size
@@ -64,7 +70,89 @@ class PrivacyEngine:
             clip_norm=self.max_grad_norm,
             clip_fn=self.clip_fn,
             frozen_prefixes=self.frozen_prefixes,
+            plan=self.plan,
         )
+
+    # -- measured-cost autotuning -----------------------------------------
+    def use_plan(self, plan: Any) -> None:
+        """Adopt a tuner ClipPlan; subsequent clipped_grad_fn() calls use it."""
+        self.plan = plan
+        self._clip_cfg = dataclasses.replace(self._clip_cfg, plan=plan)
+
+    def tune(
+        self,
+        params: Any,
+        batch: Any,
+        *,
+        arch: Optional[str] = None,
+        measure: Optional[Any] = None,
+        search_max_batch: bool = True,
+        budget_bytes: Optional[int] = None,
+        hi_cap: int = 4096,
+        plan_path: Optional[str] = "auto",
+        use_cache: bool = True,
+    ) -> Any:
+        """Profile ghost vs instantiate per tap on this device, search the
+        max physical microbatch, adopt and (by default) cache the ClipPlan.
+
+        A valid cached plan for this (arch, device, tap shapes) is adopted
+        without re-profiling (``use_cache=False`` forces a fresh measure).
+        ``plan_path="auto"`` writes to the tuner cache dir; ``None`` skips
+        writing.  Returns the plan.  The clipped gradients under the plan are
+        bit-compatible with the analytic decision — only the branch (cost)
+        changes, never the math.
+        """
+        import os
+
+        from repro.tuner import max_batch as _mb
+        from repro.tuner.measure import MeasureConfig, build_plan
+        from repro.tuner.plan import ClipPlan, default_plan_path, load_cached_plan
+
+        budget = _mb.DEFAULT_BUDGET_BYTES if budget_bytes is None else budget_bytes
+        meta = discover_meta(self.loss_with_ctx, params, batch)
+        if use_cache:
+            cached = None
+            if plan_path == "auto":
+                cached = load_cached_plan(arch, meta)
+            elif plan_path is not None and os.path.exists(plan_path):
+                try:
+                    cached = ClipPlan.load(plan_path)
+                except (ValueError, KeyError) as e:
+                    log.warning("ignoring unreadable plan %s (%s); re-tuning",
+                                plan_path, e)
+            # a cached max batch is only valid for the budget it was searched
+            # under; branch overrides alone don't depend on the budget
+            budget_ok = not search_max_batch or (
+                cached is not None and cached.budget_bytes == budget
+            )
+            if cached is not None and budget_ok and cached.matches(meta):
+                self.use_plan(cached)
+                return cached
+        plan = build_plan(meta, measure=measure or MeasureConfig(), arch=arch)
+        if search_max_batch:
+            grad_fn = dp_value_and_clipped_grad(
+                self.loss_with_ctx, dataclasses.replace(self._clip_cfg, plan=plan)
+            )
+            mp = _mb.max_batch_by_memory(
+                grad_fn, params, batch, budget_bytes=budget, hi_cap=hi_cap,
+                reserved_bytes=_mb.resident_state_bytes(params),
+            )
+            if mp > 0:
+                _, steps = _mb.derive_accumulation(self.batch_size, mp)
+                plan = plan.replace_batch(
+                    physical_batch=mp,
+                    logical_batch=self.batch_size,
+                    accumulation_steps=steps,
+                    budget_bytes=budget,
+                )
+        if plan_path is not None:
+            path = (
+                default_plan_path(arch, plan.fingerprint)
+                if plan_path == "auto" else plan_path
+            )
+            plan.save(path)
+        self.use_plan(plan)
+        return plan
 
     # -- validation -------------------------------------------------------
     def validate(self, params: Any, batch: Any) -> None:

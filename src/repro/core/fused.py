@@ -43,6 +43,7 @@ class ProbeSpec:
     decision_by: str = "space"
     ghost_block: int = 512
     inst_block_d: int = 8192
+    override: Optional[str] = None  # tuner ClipPlan branch, wins over decide()
 
 
 def make_probe(spec: ProbeSpec):
@@ -66,6 +67,7 @@ def make_probe(spec: ProbeSpec):
             decision_by=spec.decision_by,
             ghost_block=spec.ghost_block,
             inst_block_d=spec.inst_block_d,
+            override=spec.override,
         )
         da = jnp.zeros(a.shape, a.dtype) if a is not None else None
         return g, da, dz

@@ -63,13 +63,18 @@ def tap_norm_sq(
     decision_by: str = "space",
     ghost_block: int = 512,
     inst_block_d: int = 8192,
+    override: Optional[str] = None,
 ) -> jax.Array:
-    """Per-sample squared norm contributions: (B,) fp32 (weight + bias)."""
+    """Per-sample squared norm contributions: (B,) fp32 (weight + bias).
+
+    ``override`` forces the matmul branch (tuner ClipPlan); both branches
+    compute the same norm, so it changes cost only, never the result.
+    """
     g = g.astype(jnp.float32)
     total = jnp.zeros((meta.batch_size,), jnp.float32)
 
     if meta.kind == "matmul":
-        branch = decide(meta, mode=mode, by=decision_by)
+        branch = decide(meta, mode=mode, by=decision_by, override=override)
         aa, gg = _canonical_ag(meta, a, g)
         if branch == "ghost":
             rows = gops.ghost_norm_sq(aa, gg, block=ghost_block)

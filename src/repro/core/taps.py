@@ -99,6 +99,15 @@ class ClipRuntime:
     decision_by: str = "space"
     ghost_block: int = 512
     inst_block_d: int = 8192
+    # measured-cost branch overrides from a tuner ClipPlan, as sorted
+    # (tap_name, branch) pairs (tuple: ClipRuntime must stay hashable)
+    overrides: tuple[tuple[str, str], ...] = ()
+
+    def override_for(self, name: str) -> Optional[str]:
+        for tap_name, branch in self.overrides:
+            if tap_name == name:
+                return branch
+        return None
 
 
 class Ctx:
@@ -198,6 +207,7 @@ class Ctx:
                         decision_by=self.clip.decision_by,
                         ghost_block=self.clip.ghost_block,
                         inst_block_d=self.clip.inst_block_d,
+                        override=self.clip.override_for(full),
                     )
                 )
                 s = probe(s, a_p, self.zs[full])

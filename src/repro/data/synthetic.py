@@ -57,6 +57,31 @@ def synthetic_lm_batch(cfg: SyntheticLMConfig, step: int, shard: int = 0) -> dic
     }
 
 
+def synthetic_arch_batch(cfg, *, batch: int, seq: int, step: int = 0, shard: int = 0) -> dict:
+    """Family-aware batch for an ``ArchConfig``: LM tokens plus the stub
+    frontend inputs (VLM patch prefixes, audio frames) the family expects.
+
+    Shared by launch/train.py and the tuner CLI so both profile and train on
+    identically-shaped inputs.
+    """
+    text_len = seq - (getattr(cfg, "prefix_tokens", 0) or 0)
+    b = synthetic_lm_batch(
+        SyntheticLMConfig(vocab=cfg.vocab, seq_len=text_len, batch=batch), step, shard
+    )
+    dtype = jnp.dtype(getattr(cfg, "dtype", "float32"))
+    if cfg.family == "vlm":
+        key = jax.random.fold_in(jax.random.PRNGKey(77), step)
+        b["prefix"] = jax.random.normal(
+            key, (batch, cfg.prefix_tokens, cfg.prefix_dim), jnp.float32
+        ).astype(dtype)
+    if cfg.family == "audio":
+        key = jax.random.fold_in(jax.random.PRNGKey(78), step)
+        b["frames"] = jax.random.normal(
+            key, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32
+        ).astype(dtype)
+    return b
+
+
 def synthetic_vision_batch(
     *, batch: int, image: int, channels: int, n_classes: int, step: int,
     shard: int = 0, seed: int = 0,

@@ -26,6 +26,9 @@ class DPTrainConfig:
     noise_multiplier: float = 1.0
     logical_batch: int = 256  # denominator for the privatized mean
     accumulation_steps: int = 1
+    # measured-cost branch plan (repro.tuner.ClipPlan); threaded into the
+    # clipping config so jitted steps pick the profiled branch per tap
+    plan: Optional[Any] = None
 
 
 def make_train_state(model, key: jax.Array, optimizer: Optimizer) -> dict:
@@ -52,7 +55,8 @@ def make_train_step(
 ) -> Callable:
     """Full DP step: clip (mixed ghost) -> noise -> optimizer update."""
     clip_cfg = ClipConfig(
-        mode=dp.clipping_mode, clip_norm=dp.clip_norm, clip_fn=dp.clip_fn
+        mode=dp.clipping_mode, clip_norm=dp.clip_norm, clip_fn=dp.clip_fn,
+        plan=dp.plan,
     )
     grad_fn = dp_value_and_clipped_grad(model.loss_with_ctx, clip_cfg)
 
@@ -98,7 +102,8 @@ def make_clipped_microstep(model, dp: DPTrainConfig) -> Callable:
     ``make_noise_finalize`` — the paper's virtual_step pattern.
     """
     clip_cfg = ClipConfig(
-        mode=dp.clipping_mode, clip_norm=dp.clip_norm, clip_fn=dp.clip_fn
+        mode=dp.clipping_mode, clip_norm=dp.clip_norm, clip_fn=dp.clip_fn,
+        plan=dp.plan,
     )
     return dp_value_and_clipped_grad(model.loss_with_ctx, clip_cfg)
 
@@ -106,11 +111,17 @@ def make_clipped_microstep(model, dp: DPTrainConfig) -> Callable:
 def make_noise_finalize(optimizer: Optimizer, schedule: Callable, dp: DPTrainConfig):
     def finalize(state: dict, grad_sum: Any) -> dict:
         rng, noise_key = jax.random.split(state["rng"])
-        std = dp.noise_multiplier * dp.clip_norm
-        noisy = add_dp_noise(grad_sum, noise_key, std)
-        grads = jax.tree_util.tree_map(
-            lambda g: g.astype(jnp.float32) / dp.logical_batch, noisy
-        )
+        if dp.clipping_mode == "non_private":
+            # mirror make_train_step: no noise, no logical-batch division
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grad_sum
+            )
+        else:
+            std = dp.noise_multiplier * dp.clip_norm
+            noisy = add_dp_noise(grad_sum, noise_key, std)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32) / dp.logical_batch, noisy
+            )
         lr = schedule(state["step"])
         updates, opt_state = optimizer.update(
             grads, state["opt"], state["params"], state["step"], lr

@@ -10,6 +10,13 @@ via ``--fail-at-step``).
 CPU quickstart (reduced config):
     python -m repro.launch.train --arch qwen2-72b --reduced --steps 20 \
         --batch 4 --seq 64 --ckpt-dir /tmp/ckpt
+
+Measured-cost autotuning (repro.tuner): ``--tune`` profiles ghost vs
+instantiate per tap on this device and binary-searches the max physical
+microbatch; ``--plan plan.json`` reuses a cached ClipPlan.  When the tuned
+physical batch is smaller than ``--batch`` (the logical batch), the loop
+automatically switches to gradient accumulation with the derived number of
+microsteps (the paper's virtual-step pattern).
 """
 from __future__ import annotations
 
@@ -25,10 +32,16 @@ from repro.configs.registry import build_model, get_arch
 from repro.core.engine import PrivacyEngine
 from repro.data.pipeline import DataPipeline
 from repro.data.poisson import poisson_sample_mask
-from repro.data.synthetic import SyntheticLMConfig, synthetic_lm_batch
+from repro.data.synthetic import synthetic_arch_batch
 from repro.checkpoint.manager import CheckpointManager
 from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import DPTrainConfig, make_train_state, make_train_step
+from repro.launch.steps import (
+    DPTrainConfig,
+    make_clipped_microstep,
+    make_noise_finalize,
+    make_train_state,
+    make_train_step,
+)
 from repro.optim import adam, warmup_cosine
 from repro.parallel.reshard import use_reshard_rules
 from repro.parallel.sharding import batch_shardings, state_shardings
@@ -61,6 +74,14 @@ def parse_args(argv=None):
     ap.add_argument("--fail-at-step", type=int, default=None,
                     help="fault injection: raise at this step (tests)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--tune", action="store_true",
+                    help="profile ghost-vs-instantiate per tap and search the "
+                         "max physical microbatch before training")
+    ap.add_argument("--plan", default=None,
+                    help="ClipPlan JSON to load (or, with --tune, to write)")
+    ap.add_argument("--tune-budget-gb", type=float, default=16.0,
+                    help="memory budget for the --tune max-batch search")
+    ap.add_argument("--tune-hi-cap", type=int, default=4096)
     return ap.parse_args(argv)
 
 
@@ -72,53 +93,99 @@ def run_once(args) -> int:
     mesh = make_host_mesh()
 
     # privacy engine: sigma from target epsilon (or given), accountant attached
-    engine = PrivacyEngine(
-        loss_with_ctx=model.loss_with_ctx,
-        batch_size=args.batch,
-        sample_size=args.sample_size,
-        steps=args.steps,
-        max_grad_norm=args.clip_norm,
-        target_epsilon=args.target_epsilon,
-        noise_multiplier=None if args.target_epsilon else args.noise_multiplier,
-        mode=args.mode,
-    )
+    def make_engine(batch_size: int) -> PrivacyEngine:
+        return PrivacyEngine(
+            loss_with_ctx=model.loss_with_ctx,
+            batch_size=batch_size,
+            sample_size=args.sample_size,
+            steps=args.steps,
+            max_grad_norm=args.clip_norm,
+            target_epsilon=args.target_epsilon,
+            noise_multiplier=None if args.target_epsilon else args.noise_multiplier,
+            mode=args.mode,
+        )
+
+    engine = make_engine(args.batch)
     log.info("noise multiplier sigma=%.4f (q=%.5f)", engine.noise_multiplier,
              engine.sampling_rate)
 
     optimizer = adam(state_dtype=jnp.dtype(cfg.opt_state_dtype))
     schedule = warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps)
+
+    state = make_train_state(model, jax.random.PRNGKey(0), optimizer)
+
+    # measured-cost autotuning: load a cached ClipPlan or profile one now
+    seq = args.seq if args.reduced else 4096
+    plan = None
+    if args.plan and not args.tune:
+        from repro.core.clipping import discover_meta
+        from repro.tuner import ClipPlan
+
+        plan = ClipPlan.load(args.plan)
+        probe = synthetic_arch_batch(cfg, batch=args.batch, seq=seq)
+        metas = discover_meta(model.loss_with_ctx, state["params"], probe)
+        if not plan.matches(metas):
+            # a stale plan must not drive anything — neither the branch
+            # overrides nor the microbatch geometry it measured elsewhere
+            log.warning("ClipPlan %s is stale for this arch/device; falling "
+                        "back to the analytic decision", args.plan)
+            plan = None
+        else:
+            engine.use_plan(plan)
+            log.info("loaded ClipPlan %s (device %s, %d branch overrides)",
+                     args.plan, plan.device, len(plan.branches))
+    elif args.tune:
+        probe = synthetic_arch_batch(cfg, batch=args.batch, seq=seq)
+        plan = engine.tune(
+            state["params"], probe, arch=cfg.name,
+            budget_bytes=int(args.tune_budget_gb * 1024**3),
+            hi_cap=args.tune_hi_cap,
+            plan_path=args.plan if args.plan else "auto",
+        )
+        log.info("tuned %d taps; max physical batch=%s", len(plan.branches),
+                 plan.physical_batch)
+
+    physical, accum = args.batch, 1
+    if plan is not None and plan.physical_batch:
+        from repro.tuner import derive_accumulation
+
+        physical, accum = derive_accumulation(args.batch, plan.physical_batch)
+    logical_eff = physical * accum
+    if accum > 1:
+        log.info(
+            "tuned physical batch=%d (max %d): logical %d -> %d accumulation "
+            "steps (effective logical %d)", physical, plan.physical_batch,
+            args.batch, accum, logical_eff,
+        )
+    if logical_eff != args.batch:
+        # accumulation rounding changed the per-step sample count: rebuild
+        # the engine so the accountant's sampling rate (and sigma, when
+        # derived from a target epsilon) match what actually runs
+        log.info("effective logical batch %d != requested %d; re-deriving "
+                 "privacy accounting", logical_eff, args.batch)
+        engine = make_engine(logical_eff)
+        if plan is not None:
+            engine.use_plan(plan)
+
     dp = DPTrainConfig(
         clipping_mode=args.mode,
         clip_norm=args.clip_norm,
         noise_multiplier=engine.noise_multiplier,
-        logical_batch=args.batch,
+        logical_batch=logical_eff,
+        accumulation_steps=accum,
+        plan=plan,
     )
     step_fn = make_train_step(model, optimizer, schedule, dp)
 
-    state = make_train_state(model, jax.random.PRNGKey(0), optimizer)
     st_sh = state_shardings(model, mesh, cfg, jax.eval_shape(lambda: state))
     state = jax.tree_util.tree_map(jax.device_put, state, st_sh)
 
-    # data
-    seq = args.seq if args.reduced else 4096
-    text_len = seq - (cfg.prefix_tokens or 0)
-    lm_cfg = SyntheticLMConfig(vocab=cfg.vocab, seq_len=text_len, batch=args.batch)
-
+    # data (microbatches of the tuned physical size)
     def batch_fn(step, shard):
-        b = synthetic_lm_batch(lm_cfg, step, shard)
+        b = synthetic_arch_batch(cfg, batch=physical, seq=seq, step=step, shard=shard)
         if args.poisson:
             key = jax.random.fold_in(jax.random.PRNGKey(4242), step)
-            b["mask"] = poisson_sample_mask(key, args.batch, engine.sampling_rate)
-        if cfg.family == "vlm":
-            key = jax.random.fold_in(jax.random.PRNGKey(77), step)
-            b["prefix"] = jax.random.normal(
-                key, (args.batch, cfg.prefix_tokens, cfg.prefix_dim), jnp.float32
-            ).astype(jnp.dtype(cfg.dtype))
-        if cfg.family == "audio":
-            key = jax.random.fold_in(jax.random.PRNGKey(78), step)
-            b["frames"] = jax.random.normal(
-                key, (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32
-            ).astype(jnp.dtype(cfg.dtype))
+            b["mask"] = poisson_sample_mask(key, physical, engine.sampling_rate)
         return b
 
     start_step = 0
@@ -130,16 +197,35 @@ def run_once(args) -> int:
             log.info("resumed from step %d", start_step)
             engine.record_step(start_step)
 
-    pipeline = DataPipeline(batch_fn, start_step=start_step).start()
+    pipeline = DataPipeline(batch_fn, start_step=start_step * accum).start()
     b_sh = batch_shardings(
         jax.eval_shape(lambda: batch_fn(0, 0)), mesh, cfg
     )
     with use_reshard_rules(mesh, cfg):
-        jit_step = jax.jit(
-            step_fn, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None),
-            donate_argnums=(0,),
-        ).lower(jax.eval_shape(lambda: state),
-                jax.eval_shape(lambda: batch_fn(0, 0))).compile()
+        if accum == 1:
+            jit_step = jax.jit(
+                step_fn, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None),
+                donate_argnums=(0,),
+            ).lower(jax.eval_shape(lambda: state),
+                    jax.eval_shape(lambda: batch_fn(0, 0))).compile()
+        else:
+            # virtual-step pattern: accumulate clipped grad sums over
+            # physical microbatches, then noise + update once per logical
+            # step.  AOT-compile INSIDE the reshard context (like the
+            # accum==1 path): a lazy jit would trace at first call, outside
+            # it, silently dropping every sharding constraint.
+            st_spec = jax.eval_shape(lambda: state)
+            b_spec = jax.eval_shape(lambda: batch_fn(0, 0))
+            micro_raw = make_clipped_microstep(model, dp)
+            micro_fn = jax.jit(
+                micro_raw, in_shardings=(st_sh["params"], b_sh),
+            ).lower(st_spec["params"], b_spec).compile()
+            g_spec = jax.eval_shape(micro_raw, st_spec["params"], b_spec)[1]
+            fin_fn = jax.jit(
+                make_noise_finalize(optimizer, schedule, dp),
+                in_shardings=(st_sh, None), out_shardings=st_sh,
+                donate_argnums=(0,),
+            ).lower(st_spec, g_spec).compile()
 
     watchdog = StepWatchdog()
     preempt = PreemptionHandler().install()
@@ -147,11 +233,34 @@ def run_once(args) -> int:
     step = start_step
     try:
         while step < args.steps:
-            step_idx, batch = pipeline.next()
-            watchdog.start_step()
-            if args.fail_at_step is not None and step_idx == args.fail_at_step:
-                raise RuntimeError(f"injected fault at step {step_idx}")
-            state, metrics = jit_step(state, batch)
+            if accum == 1:
+                step_idx, batch = pipeline.next()
+                watchdog.start_step()
+                if args.fail_at_step is not None and step_idx == args.fail_at_step:
+                    raise RuntimeError(f"injected fault at step {step_idx}")
+                state, metrics = jit_step(state, batch)
+            else:
+                watchdog.start_step()
+                step_idx = step
+                if args.fail_at_step is not None and step_idx == args.fail_at_step:
+                    raise RuntimeError(f"injected fault at step {step_idx}")
+                # loss/clip stats stay device arrays until logging: a
+                # float() inside the loop would sync the host per microstep
+                grad_sum, loss_acc, clip_hits = None, 0.0, 0.0
+                for _ in range(accum):
+                    _, batch = pipeline.next()
+                    loss, g, aux = micro_fn(state["params"], batch)
+                    grad_sum = g if grad_sum is None else jax.tree_util.tree_map(
+                        jnp.add, grad_sum, g
+                    )
+                    loss_acc = loss_acc + loss
+                    clip_hits = clip_hits + jnp.sum(aux["clip_factors"] < 1.0)
+                state = fin_fn(state, grad_sum)
+                metrics = {
+                    "loss": loss_acc / accum,
+                    "lr": schedule(step_idx),
+                    "clip_frac": clip_hits / (physical * accum),
+                }
             engine.record_step()
             dt = watchdog.end_step(step_idx)
             step = step_idx + 1

@@ -1,0 +1,38 @@
+"""repro.tuner: measured-cost autotuning for the clipping branch decision.
+
+Replaces the analytic Eq-(4.1) rule with per-tap microbenchmarks on the
+actual device, caches the result as a ``ClipPlan`` (plan.py), and
+binary-searches the true max physical microbatch (max_batch.py).  Consumed
+by ``ClipConfig(plan=...)`` / ``PrivacyEngine.tune`` / ``launch.train
+--tune``.
+"""
+from repro.tuner.max_batch import (
+    derive_accumulation,
+    find_max_physical_batch,
+    max_batch_by_memory,
+)
+from repro.tuner.measure import MeasureConfig, build_plan, measure_branches, measure_tap
+from repro.tuner.plan import (
+    ClipPlan,
+    TapTiming,
+    default_plan_path,
+    device_string,
+    load_cached_plan,
+    shape_fingerprint,
+)
+
+__all__ = [
+    "ClipPlan",
+    "TapTiming",
+    "MeasureConfig",
+    "build_plan",
+    "measure_branches",
+    "measure_tap",
+    "derive_accumulation",
+    "find_max_physical_batch",
+    "max_batch_by_memory",
+    "default_plan_path",
+    "device_string",
+    "load_cached_plan",
+    "shape_fingerprint",
+]

@@ -1,0 +1,5 @@
+import sys
+
+from repro.tuner.cli import main
+
+sys.exit(main())

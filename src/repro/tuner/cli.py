@@ -1,0 +1,127 @@
+"""Tuner CLI: profile a model's taps and write the ClipPlan artifact.
+
+    PYTHONPATH=src python -m repro.tuner --arch xlstm-350m --reduced
+
+Steps: build the arch (registry), discover its taps, time ghost vs
+instantiate per matmul tap on this device, binary-search the max physical
+microbatch under the memory budget, and write the plan JSON (cache path or
+--plan).  The printed table shows where the measured winner disagrees with
+the analytic Eq-(4.1) rule — the entire reason this subsystem exists.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.configs.registry import build_model, get_arch
+from repro.core.clipping import ClipConfig, discover_meta, dp_value_and_clipped_grad
+from repro.core.decision import decide
+from repro.data.synthetic import synthetic_arch_batch
+from repro.tuner import max_batch as mb
+from repro.tuner.measure import MeasureConfig, build_plan
+from repro.tuner.plan import default_plan_path
+from repro.utils.logging import get_logger
+
+log = get_logger("tuner")
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(prog="repro.tuner")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="physical microbatch used for profiling")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--logical-batch", type=int, default=None,
+                    help="derive accumulation_steps for this logical batch "
+                         "(default: --batch)")
+    ap.add_argument("--plan", default=None,
+                    help="output path (default: ~/.cache/repro-tuner/)")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--max-rows", type=int, default=64,
+                    help="clamp profiled rows N (0 = unclamped, use --batch as-is)")
+    ap.add_argument("--budget-gb", type=float, default=16.0,
+                    help="memory budget for the max-batch search")
+    ap.add_argument("--hi-cap", type=int, default=4096)
+    ap.add_argument("--skip-max-batch", action="store_true")
+    ap.add_argument("--mode", default="mixed_ghost",
+                    help="clipping mode the max-batch search compiles")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = synthetic_arch_batch(cfg, batch=args.batch, seq=args.seq)
+
+    metas = discover_meta(model.loss_with_ctx, params, batch)
+    log.info("discovered %d taps (%d matmul) on %s", len(metas),
+             sum(1 for m in metas.values() if m.kind == "matmul"),
+             jax.devices()[0].device_kind)
+
+    measure = MeasureConfig(
+        repeats=args.repeats, warmup=args.warmup,
+        max_rows=args.max_rows or None,
+    )
+    plan = build_plan(metas, measure=measure, arch=cfg.name)
+
+    if not args.skip_max_batch:
+        grad_fn = dp_value_and_clipped_grad(
+            model.loss_with_ctx, ClipConfig(mode=args.mode, plan=plan)
+        )
+        budget = int(args.budget_gb * 1024**3)
+        max_physical = mb.max_batch_by_memory(
+            grad_fn, params, batch, budget_bytes=budget, hi_cap=args.hi_cap,
+            reserved_bytes=mb.resident_state_bytes(params),
+        )
+        if max_physical <= 0:
+            log.warning("no batch fits the %.1fGB budget; plan has no "
+                        "physical_batch", args.budget_gb)
+        else:
+            logical = args.logical_batch or args.batch
+            physical, steps = mb.derive_accumulation(logical, max_physical)
+            plan = plan.replace_batch(
+                physical_batch=max_physical,
+                logical_batch=logical,
+                accumulation_steps=steps,
+                budget_bytes=budget,
+            )
+            log.info("max physical batch %d under %.1fGB; logical %d -> "
+                     "%d x %d microsteps", max_physical, args.budget_gb,
+                     logical, physical, steps)
+
+    path = args.plan or default_plan_path(cfg.name, plan.fingerprint)
+    plan.save(path)
+
+    branch_map = plan.branch_map()
+    timing = {name: (g, i) for name, g, i in plan.timings}
+    print(f"\nClipPlan for {cfg.name} on {plan.device}  ->  {path}")
+    print(f"{'tap':<44s} {'T':>5s} {'D':>6s} {'p':>6s} "
+          f"{'ghost_us':>9s} {'inst_us':>9s} {'analytic':>11s} {'measured':>11s}")
+    flips = 0
+    for name in sorted(branch_map):
+        m = metas[name]
+        analytic = decide(m, mode="mixed_ghost")
+        measured = branch_map[name]
+        g_us, i_us = timing[name]
+        flag = "  <- flip" if analytic != measured else ""
+        flips += analytic != measured
+        print(f"{name:<44s} {m.T:>5d} {m.D:>6d} {m.p:>6d} "
+              f"{g_us:>9.1f} {i_us:>9.1f} {analytic:>11s} {measured:>11s}{flag}")
+    print(f"\n{flips}/{len(branch_map)} taps flip vs the analytic rule")
+    if plan.physical_batch:
+        print(f"max physical batch: {plan.physical_batch} "
+              f"(logical {plan.logical_batch} = "
+              f"{plan.accumulation_steps} microsteps)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

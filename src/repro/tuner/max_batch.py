@@ -1,0 +1,139 @@
+"""Max physical microbatch search (paper Table 7, reused as a runtime feature).
+
+The paper bisects the largest batch that trains without OOM on a 16GB V100;
+here the same doubling + binary search runs against XLA's compiled peak-memory
+model (args + outputs + temps from ``memory_analysis()``), which is exact,
+fast, and hardware-independent — no trial allocations, no poisoned allocator
+state after a real OOM.  The result feeds gradient accumulation: a fixed
+*logical* batch (the privacy unit) is executed as ``accumulation_steps``
+microbatches of the tuned physical size — the paper's virtual-step pattern.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping, Optional
+
+import jax
+
+from repro.utils.logging import get_logger
+
+log = get_logger("tuner.max_batch")
+
+DEFAULT_BUDGET_BYTES = 16 * 1024**3  # the paper's 16GB V100
+
+
+def compiled_memory_bytes(fn: Callable, *specs) -> int:
+    """Peak-memory model from an AOT compile (no execution, no allocation)."""
+    compiled = jax.jit(fn).lower(*specs).compile()
+    ma = compiled.memory_analysis()
+    return int(
+        ma.argument_size_in_bytes + ma.output_size_in_bytes
+        + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+    )
+
+
+def batch_specs_at(batch: Any, b: int) -> Any:
+    """Shape specs for ``batch`` with its leading (batch) dim replaced by b."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct((b,) + tuple(x.shape[1:]), x.dtype), batch
+    )
+
+
+def find_max_physical_batch(
+    fits: Callable[[int], bool], *, lo: int = 1, hi_cap: int = 65536
+) -> int:
+    """Largest b in [lo, hi_cap] with fits(b), by doubling + exact bisection.
+
+    Assumes ``fits`` is monotone (true below some threshold).  Returns 0 when
+    even ``lo`` does not fit.
+    """
+    if not fits(lo):
+        return 0
+    hi = lo
+    while hi < hi_cap and fits(min(hi * 2, hi_cap)):
+        hi = min(hi * 2, hi_cap)
+    if hi >= hi_cap:
+        return hi_cap
+    # invariant: fits(hi) held, fits(min(2*hi, hi_cap)) just failed — reuse
+    # that observation as the bisection upper bound (each fits() is a full
+    # XLA compile; never re-test a known-failing point)
+    bad = min(hi * 2, hi_cap)
+    while bad - hi > 1:
+        mid = (hi + bad) // 2
+        if fits(mid):
+            hi = mid
+        else:
+            bad = mid
+    return hi
+
+
+def resident_state_bytes(params: Any) -> int:
+    """Estimate of training-loop memory the microstep compile cannot see.
+
+    The compiled-memory model covers one clipped-grad call (args + outputs +
+    temps).  The real loop also keeps the optimizer state (Adam: 2x fp32
+    params) and, under accumulation, the running grad_sum plus its transient
+    twin during the tree add (~2x fp32 params) resident — reserve them off
+    the budget so the tuned batch fits the loop, not just the microstep.
+    """
+    n = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+    return 4 * 4 * n
+
+
+def max_batch_by_memory(
+    grad_fn: Callable,
+    params: Any,
+    batch: Any,
+    *,
+    budget_bytes: int = DEFAULT_BUDGET_BYTES,
+    hi_cap: int = 65536,
+    reserved_bytes: int = 0,
+) -> int:
+    """Largest physical batch whose compiled clipping step fits the budget.
+
+    ``grad_fn(params, batch)`` is the clipped-gradient function (typically
+    ``dp_value_and_clipped_grad`` output); ``batch`` is a template whose
+    leading dim is resized during the search.  ``reserved_bytes`` (see
+    ``resident_state_bytes``) is subtracted from the budget up front.
+    """
+    budget_bytes = budget_bytes - reserved_bytes
+    if budget_bytes <= 0:
+        log.warning("memory budget entirely consumed by resident state "
+                    "(%.2f GB reserved)", reserved_bytes / 1024**3)
+        return 0
+    p_specs = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+    )
+
+    def fits(b: int) -> bool:
+        try:
+            mem = compiled_memory_bytes(grad_fn, p_specs, batch_specs_at(batch, b))
+        except Exception as e:  # noqa: BLE001 — compile failure == does not fit
+            msg = str(e)
+            if "RESOURCE_EXHAUSTED" in msg or "Out of memory" in msg:
+                log.debug("batch %d exhausts memory at compile time", b)
+            else:
+                # a non-memory failure would silently report "nothing fits";
+                # surface it so a grad_fn bug isn't mistaken for a tiny budget
+                log.warning("batch %d failed to compile with a non-memory "
+                            "error: %s", b, msg.splitlines()[0] if msg else e)
+            return False
+        log.debug("batch %d -> %.2f GB", b, mem / 1024**3)
+        return mem <= budget_bytes
+
+    return find_max_physical_batch(fits, hi_cap=hi_cap)
+
+
+def derive_accumulation(logical_batch: int, max_physical: int) -> tuple[int, int]:
+    """(physical_batch, accumulation_steps) realizing a fixed logical batch.
+
+    Picks the fewest microsteps that respect the memory bound, then evens the
+    microbatch out (e.g. logical 256 with max 96 -> 86 x 3, not 96+96+64).
+    Guarantees physical <= max_physical and physical * steps >= logical.
+    """
+    if logical_batch <= 0:
+        raise ValueError(f"logical_batch must be positive, got {logical_batch}")
+    if max_physical <= 0:
+        raise ValueError(f"max_physical must be positive, got {max_physical}")
+    steps = -(-logical_batch // max_physical)  # ceil
+    physical = -(-logical_batch // steps)
+    return physical, steps

@@ -1,0 +1,149 @@
+"""Measured per-tap branch costs: ghost norm vs gradient instantiation.
+
+The analytic decision (Eq 4.1) counts multiplies; this module instead times
+both branch kernels on the actual device over the tap's real canonical
+shapes — a (N, T, D) activation against a (N, T, p) cotangent, exactly what
+``ghost.tap_norm_sq`` feeds them at train time — with warmup and
+median-of-k.  Convolution taps are timed post-unfold: both branches consume
+the unfolded activation, so the (shared) im2col cost cancels out of the
+comparison.
+
+Only matmul taps are measured.  Embedding / scale / bias / dw_conv taps have
+a single viable branch (decision.decide's forced cases) and are never
+overridden.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decision import decide
+from repro.core.taps import TapMeta
+from repro.kernels.ghost_norm import ops as gops
+from repro.tuner.plan import (
+    ClipPlan,
+    TapTiming,
+    device_string,
+    shape_fingerprint,
+    tap_signature,
+)
+from repro.utils.logging import get_logger
+
+log = get_logger("tuner.measure")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasureConfig:
+    repeats: int = 5  # timed iterations; the median is kept
+    warmup: int = 2  # discarded iterations (compile + caches)
+    ghost_block: int = 512
+    inst_block_d: int = 8192
+    # clamp the row dim N = stack*B*groups during profiling; timings scale
+    # ~linearly in N, so the *comparison* is preserved while huge-batch taps
+    # stay cheap to profile (tuning must never OOM the device it is sizing).
+    # None = use the discovered batch as-is.
+    max_rows: Optional[int] = 64
+    seed: int = 0
+
+
+def time_us(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall microseconds per call (blocks on outputs)."""
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def _tap_rows(meta: TapMeta, max_rows: Optional[int]) -> int:
+    n = meta.n_stack * max(meta.batch_size, 1) * max(meta.n_groups, 1)
+    if max_rows is not None:
+        n = max(1, min(n, max_rows))
+    return n
+
+
+def measure_tap(meta: TapMeta, cfg: MeasureConfig = MeasureConfig()) -> Optional[TapTiming]:
+    """Time both branches for one matmul tap; None for forced-branch kinds."""
+    if meta.kind != "matmul":
+        return None
+    n = _tap_rows(meta, cfg.max_rows)
+    key = jax.random.PRNGKey(cfg.seed)
+    ka, kg = jax.random.split(key)
+    dtype = jnp.dtype(meta.s_dtype)
+    # match the train-time kernels exactly: activations stay in their
+    # storage dtype, but tap_norm_sq upcasts the cotangent to fp32 before
+    # either branch runs (core/ghost.py) — time what will actually execute
+    a = jax.random.normal(ka, (n, meta.T, meta.D), jnp.float32).astype(dtype)
+    g = jax.random.normal(kg, (n, meta.T, meta.p), jnp.float32)
+
+    ghost_fn = jax.jit(lambda x, y: gops.ghost_norm_sq(x, y, block=cfg.ghost_block))
+    inst_fn = jax.jit(
+        lambda x, y: gops.instantiated_norm_sq(x, y, block_d=cfg.inst_block_d)
+    )
+    ghost_us = time_us(ghost_fn, a, g, repeats=cfg.repeats, warmup=cfg.warmup)
+    inst_us = time_us(inst_fn, a, g, repeats=cfg.repeats, warmup=cfg.warmup)
+    return TapTiming(ghost_us=ghost_us, instantiate_us=inst_us)
+
+
+def _shape_key(name: str, meta: TapMeta) -> tuple:
+    sig = tap_signature(name, meta)
+    del sig["name"]
+    return tuple(sorted((k, tuple(v) if isinstance(v, list) else v)
+                        for k, v in sig.items()))
+
+
+def measure_branches(
+    metas: Mapping[str, TapMeta], cfg: MeasureConfig = MeasureConfig()
+) -> dict[str, TapTiming]:
+    """One timing per *unique shape signature*, fanned out to all taps.
+
+    Identically-shaped layers (every layer of a homogeneous stack) must get
+    the same branch: measuring them independently multiplies profiling cost
+    and lets timer noise encode jitter as per-layer "hardware truth".
+    """
+    by_shape: dict[tuple, TapTiming] = {}
+    out: dict[str, TapTiming] = {}
+    for name in sorted(metas):
+        meta = metas[name]
+        if meta.kind != "matmul":
+            continue
+        key = _shape_key(name, meta)
+        timing = by_shape.get(key)
+        if timing is None:
+            timing = measure_tap(meta, cfg)
+            by_shape[key] = timing
+            analytic = decide(meta, mode="mixed_ghost")
+            mark = "" if analytic == timing.winner else "  (!= analytic %s)" % analytic
+            log.info(
+                "%s: ghost=%.1fus inst=%.1fus -> %s%s",
+                name, timing.ghost_us, timing.instantiate_us, timing.winner, mark,
+            )
+        out[name] = timing
+    return out
+
+
+def build_plan(
+    metas: Mapping[str, TapMeta],
+    *,
+    measure: MeasureConfig = MeasureConfig(),
+    arch: Optional[str] = None,
+) -> ClipPlan:
+    """Profile every matmul tap and assemble the measured-cost ClipPlan."""
+    timings = measure_branches(metas, measure)
+    return ClipPlan(
+        fingerprint=shape_fingerprint(metas),
+        device=device_string(),
+        branches=tuple((name, t.winner) for name, t in sorted(timings.items())),
+        arch=arch,
+        timings=tuple(
+            (name, t.ghost_us, t.instantiate_us) for name, t in sorted(timings.items())
+        ),
+    )

@@ -1,0 +1,234 @@
+"""The ClipPlan artifact: a cached, device-specific clipping decision.
+
+The analytic rule Eq (4.1) predicts which branch (ghost norm vs gradient
+instantiation) is cheaper from operation counts alone.  On real hardware the
+winner also depends on kernel launch overhead, tiling, dtype, and fusion, so
+the tuner *measures* both branches per tap (measure.py) and records the
+winners here, together with enough provenance to know when the plan is stale:
+
+- a **shape fingerprint** over every tap's (kind, T, D, p, groups, stack,
+  dtype) signature — batch size is deliberately excluded so one plan serves
+  any physical microbatch (the max-batch search varies B);
+- the **device string** (platform + device kind) the plan was measured on.
+
+``matches(metas)`` is the staleness gate; every consumption goes through it.
+``overrides_for(metas)`` returns the per-tap branch map when the plan
+matches the current model/device and an empty map (analytic fallback)
+otherwise — a stale plan can never silently redirect a branch, and callers
+using ``physical_batch`` must check ``matches`` first (launch/train.py
+does).  Plans round-trip through JSON and live under
+``~/.cache/repro-tuner/`` (override with $REPRO_TUNER_CACHE or an explicit
+path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.taps import TapMeta
+from repro.utils.logging import get_logger
+
+log = get_logger("tuner.plan")
+
+PLAN_VERSION = 1
+BRANCHES = ("ghost", "instantiate")
+
+
+def device_string(device: Optional[Any] = None) -> str:
+    """Stable identity of the accelerator a plan was measured on."""
+    d = device if device is not None else jax.devices()[0]
+    return f"{d.platform}:{d.device_kind}"
+
+
+def tap_signature(name: str, meta: TapMeta) -> dict:
+    """Per-tap shape identity (batch-size free; see module docstring)."""
+    return {
+        "name": name,
+        "kind": meta.kind,
+        "T": int(meta.T),
+        "D": int(meta.D),
+        "p": int(meta.p),
+        "n_groups": int(meta.n_groups),
+        "stack_dims": [int(s) for s in meta.stack_dims],
+        "dtype": str(jnp.dtype(meta.s_dtype)),
+        "conv": meta.conv is not None,
+    }
+
+
+def shape_fingerprint(metas: Mapping[str, TapMeta]) -> str:
+    sigs = sorted(
+        (tap_signature(name, m) for name, m in metas.items()),
+        key=lambda s: s["name"],
+    )
+    blob = json.dumps(sigs, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class TapTiming:
+    """Measured branch costs for one tap (microseconds, median-of-k)."""
+
+    ghost_us: float
+    instantiate_us: float
+
+    @property
+    def winner(self) -> str:
+        return "ghost" if self.ghost_us <= self.instantiate_us else "instantiate"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClipPlan:
+    """Serializable result of one tuning run (hashable: tuple fields only)."""
+
+    fingerprint: str
+    device: str
+    # (tap_name, branch) pairs, sorted by name; matmul taps only — other
+    # kinds have a forced branch the tuner never overrides.
+    branches: tuple[tuple[str, str], ...] = ()
+    # Table-7 measurement reused as a runtime feature: the largest physical
+    # microbatch that fits the memory budget, and the accumulation the tuning
+    # run derived for its logical batch (informational — consumers re-derive
+    # for their own logical batch via max_batch.derive_accumulation).
+    physical_batch: Optional[int] = None
+    logical_batch: Optional[int] = None
+    accumulation_steps: Optional[int] = None
+    # the budget the max-batch search ran under; a cached plan is only valid
+    # for a re-run with the same budget
+    budget_bytes: Optional[int] = None
+    # provenance
+    arch: Optional[str] = None
+    timings: tuple[tuple[str, float, float], ...] = ()  # (name, ghost, inst) us
+    version: int = PLAN_VERSION
+
+    # -- consumption -----------------------------------------------------
+    def branch_map(self) -> dict[str, str]:
+        return dict(self.branches)
+
+    def matches(
+        self, metas: Mapping[str, TapMeta], device: Optional[Any] = None
+    ) -> bool:
+        """True when this plan was measured on this device for these taps.
+
+        Gate *every* plan consumption on this — branch overrides AND the
+        tuned physical batch: a plan tuned on different hardware describes a
+        different memory budget just as much as different branch costs.
+        """
+        return (
+            self.device == device_string(device)
+            and self.fingerprint == shape_fingerprint(metas)
+        )
+
+    def overrides_for(
+        self, metas: Mapping[str, TapMeta], device: Optional[Any] = None
+    ) -> dict[str, str]:
+        """Per-tap branch overrides, or {} (analytic fallback) when stale.
+
+        A plan is stale when it was measured on a different device or for
+        different tap shapes; using it would apply timings that no longer
+        describe the hardware about to run.
+        """
+        dev = device_string(device)
+        if self.device != dev:
+            log.warning(
+                "ClipPlan measured on %s but running on %s; "
+                "falling back to the analytic Eq-(4.1) decision", self.device, dev,
+            )
+            return {}
+        fp = shape_fingerprint(metas)
+        if self.fingerprint != fp:
+            log.warning(
+                "ClipPlan fingerprint %s does not match model taps (%s); "
+                "falling back to the analytic Eq-(4.1) decision",
+                self.fingerprint, fp,
+            )
+            return {}
+        return {name: b for name, b in self.branches if name in metas}
+
+    def replace_batch(
+        self,
+        *,
+        physical_batch: int,
+        logical_batch: Optional[int] = None,
+        accumulation_steps: Optional[int] = None,
+        budget_bytes: Optional[int] = None,
+    ) -> "ClipPlan":
+        return dataclasses.replace(
+            self,
+            physical_batch=physical_batch,
+            logical_batch=logical_batch,
+            accumulation_steps=accumulation_steps,
+            budget_bytes=budget_bytes,
+        )
+
+    # -- serialization ---------------------------------------------------
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["branches"] = [list(b) for b in self.branches]
+        d["timings"] = [list(t) for t in self.timings]
+        return json.dumps(d, indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ClipPlan":
+        d = json.loads(text)
+        version = int(d.get("version", 0))
+        if version != PLAN_VERSION:
+            raise ValueError(f"unsupported ClipPlan version {version}")
+        branches = tuple((str(n), str(b)) for n, b in d.get("branches", ()))
+        for _, b in branches:
+            if b not in BRANCHES:
+                raise ValueError(f"invalid branch {b!r} in ClipPlan")
+        return cls(
+            fingerprint=str(d["fingerprint"]),
+            device=str(d["device"]),
+            branches=branches,
+            physical_batch=d.get("physical_batch"),
+            logical_batch=d.get("logical_batch"),
+            accumulation_steps=d.get("accumulation_steps"),
+            budget_bytes=d.get("budget_bytes"),
+            arch=d.get("arch"),
+            timings=tuple(
+                (str(n), float(g), float(i)) for n, g, i in d.get("timings", ())
+            ),
+            version=version,
+        )
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "ClipPlan":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def cache_dir() -> str:
+    return os.environ.get(
+        "REPRO_TUNER_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro-tuner"),
+    )
+
+
+def default_plan_path(arch: Optional[str], fingerprint: str) -> str:
+    stem = f"{arch or 'model'}-{fingerprint}"
+    return os.path.join(cache_dir(), f"{stem}.json")
+
+
+def load_cached_plan(arch: Optional[str], metas: Mapping[str, TapMeta]) -> Optional[ClipPlan]:
+    """Look up a previously tuned plan for these shapes, if any."""
+    path = default_plan_path(arch, shape_fingerprint(metas))
+    if not os.path.exists(path):
+        return None
+    try:
+        return ClipPlan.load(path)
+    except (ValueError, KeyError, json.JSONDecodeError) as e:
+        log.warning("ignoring unreadable cached plan %s (%s)", path, e)
+        return None

@@ -13,9 +13,10 @@ SCRIPT = textwrap.dedent(
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import jax, jax.numpy as jnp
-    from jax.sharding import Mesh, AxisType
+    from jax.sharding import Mesh
 
     from repro.configs.registry import build_model, get_arch
+    from repro.launch.mesh import _make_mesh
     from repro.launch.specs import train_batch_specs, materialize
     from repro.launch.steps import (DPTrainConfig, make_train_state,
                                     make_train_step, abstract_train_state)
@@ -23,8 +24,7 @@ SCRIPT = textwrap.dedent(
     from repro.parallel.sharding import batch_shardings, state_shardings
     from repro.configs.base import ShapeConfig
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = _make_mesh((2, 4), ("data", "model"))
     cfg = get_arch("mixtral-8x7b").reduced()
     model = build_model(cfg)
     opt = adam()

@@ -82,10 +82,11 @@ def test_elastic_restore_resharding(tmp_path):
     """Checkpoints restore onto a different sharding layout (elastic)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.launch.mesh import _make_mesh
+
     state = {"w": jnp.arange(8.0)}
     save_checkpoint(tmp_path, 1, state)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = _make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data"))}
     _, restored = restore_checkpoint(tmp_path, shardings=sh)
     assert restored["w"].sharding == sh["w"]

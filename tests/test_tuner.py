@@ -1,0 +1,308 @@
+"""repro.tuner: the measured-cost ClipPlan and its decision-override plumbing.
+
+Covers the Eq-(4.1) boundary cases, the Remark-4.1 time variant, plan JSON
+round-trip + stale-plan rejection, the max-batch search, and the subsystem's
+correctness oracle: clipped gradients under a (even adversarially flipped)
+plan must match the analytic ``mixed_ghost`` exactly — the branch choice is
+pure cost, never math.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.clipping import ClipConfig, discover_meta, dp_value_and_clipped_grad
+from repro.core.decision import decide, ghost_is_cheaper
+from repro.core.taps import Ctx, TapMeta
+from repro.nn.module import Dense
+from repro.tuner import (
+    ClipPlan,
+    MeasureConfig,
+    build_plan,
+    derive_accumulation,
+    device_string,
+    find_max_physical_batch,
+    max_batch_by_memory,
+    shape_fingerprint,
+)
+
+from helpers import max_tree_diff
+
+
+def _meta(kind="matmul", T=8, D=16, p=4, batch=2):
+    return TapMeta(
+        kind=kind, T=T, D=D, p=p, s_shape=(batch, T, p), s_dtype=jnp.float32,
+        param_path="w", batch_size=batch,
+    )
+
+
+# ---------------------------------------------------------------- decision --
+def test_eq41_tie_prefers_instantiate():
+    # 2T^2 == pD is NOT strictly cheaper: the paper's rule picks instantiate.
+    T, p, D = 4, 2, 16
+    assert 2 * T * T == p * D
+    assert not ghost_is_cheaper(T, D, p, by="space")
+    assert decide(_meta(T=T, D=D, p=p), mode="mixed_ghost") == "instantiate"
+
+
+def test_remark41_time_variant_differs_from_space():
+    # T=2, D=16, p=1: space rule 2T^2=8 < pD=16 -> ghost, but the time rule
+    # 2T^2(D+p+1) = 144 >= 2(T+1)pD = 96 -> instantiate.
+    assert ghost_is_cheaper(2, 16, 1, by="space")
+    assert not ghost_is_cheaper(2, 16, 1, by="time")
+    m = _meta(T=2, D=16, p=1)
+    assert decide(m, mode="mixed_ghost", by="space") == "ghost"
+    assert decide(m, mode="mixed_ghost", by="time") == "instantiate"
+
+
+def test_plan_override_wins_over_analytic_rule():
+    m = _meta(T=1, D=64, p=64)  # analytic: 2 < 4096 -> ghost
+    assert decide(m, mode="mixed_ghost") == "ghost"
+    assert decide(m, mode="mixed_ghost", override="instantiate") == "instantiate"
+    assert decide(m, mode="mixed_ghost", override="ghost") == "ghost"
+    with pytest.raises(ValueError):
+        decide(m, mode="mixed_ghost", override="banana")
+
+
+def test_override_never_wins_over_forced_kinds():
+    # embedding/scale taps have exactly one viable norm computation
+    emb = _meta(kind="embedding")
+    assert decide(emb, override="instantiate") == "ghost"
+    scale = _meta(kind="scale")
+    assert decide(scale, override="ghost") == "instantiate"
+
+
+def test_override_never_wins_over_reference_modes():
+    # the pure modes exist to measure a fixed branch everywhere; a plan must
+    # not silently turn a 'ghost' benchmark into mixed execution
+    m = _meta(T=1, D=64, p=64)
+    assert decide(m, mode="ghost", override="instantiate") == "ghost"
+    assert decide(m, mode="fastgradclip", override="ghost") == "instantiate"
+
+
+# -------------------------------------------------------------------- plan --
+def _tiny_metas():
+    return {
+        "a/out": _meta(T=8, D=16, p=4),
+        "b/out": _meta(T=2, D=32, p=32),
+        "emb/out": _meta(kind="embedding", T=8, D=1, p=16),
+    }
+
+
+def test_clipplan_json_round_trip(tmp_path):
+    metas = _tiny_metas()
+    plan = ClipPlan(
+        fingerprint=shape_fingerprint(metas),
+        device=device_string(),
+        branches=(("a/out", "instantiate"), ("b/out", "ghost")),
+        physical_batch=64,
+        logical_batch=256,
+        accumulation_steps=4,
+        arch="tiny",
+        timings=(("a/out", 10.0, 5.0), ("b/out", 3.0, 7.0)),
+    )
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    loaded = ClipPlan.load(path)
+    assert loaded == plan
+    assert loaded.branch_map() == {"a/out": "instantiate", "b/out": "ghost"}
+    # the artifact is plain JSON, inspectable by other tooling
+    raw = json.loads(open(path).read())
+    assert raw["physical_batch"] == 64
+
+
+def test_clipplan_rejects_bad_json():
+    with pytest.raises(ValueError):
+        ClipPlan.from_json(json.dumps({"fingerprint": "x", "device": "y",
+                                       "version": 99}))
+    with pytest.raises(ValueError):
+        ClipPlan.from_json(json.dumps({
+            "fingerprint": "x", "device": "y", "version": 1,
+            "branches": [["a", "banana"]],
+        }))
+
+
+def test_stale_plan_rejected_falls_back_to_analytic():
+    metas = _tiny_metas()
+    good = ClipPlan(
+        fingerprint=shape_fingerprint(metas), device=device_string(),
+        branches=(("a/out", "instantiate"),),
+    )
+    assert good.overrides_for(metas) == {"a/out": "instantiate"}
+
+    # different shapes (stale fingerprint) -> no overrides
+    stale = dataclasses.replace(good, fingerprint="deadbeefdeadbeef")
+    assert stale.overrides_for(metas) == {}
+
+    # different device -> no overrides
+    wrong_dev = dataclasses.replace(good, device="tpu:TPU v9")
+    assert wrong_dev.overrides_for(metas) == {}
+
+    # fingerprint tracks shapes: changing one tap's D changes it
+    other = dict(metas, **{"a/out": _meta(T=8, D=32, p=4)})
+    assert shape_fingerprint(other) != shape_fingerprint(metas)
+    # but not the batch size (plans transfer across physical batch)
+    rebatched = dict(metas, **{"a/out": _meta(T=8, D=16, p=4, batch=64)})
+    assert shape_fingerprint(rebatched) == shape_fingerprint(metas)
+
+
+# --------------------------------------------------------------- max batch --
+def test_find_max_physical_batch_is_exact():
+    for threshold in (1, 2, 37, 64, 100):
+        calls = []
+
+        def fits(b, t=threshold):
+            calls.append(b)
+            return b <= t
+
+        assert find_max_physical_batch(fits, hi_cap=128) == min(threshold, 128)
+    assert find_max_physical_batch(lambda b: False, hi_cap=128) == 0
+    assert find_max_physical_batch(lambda b: True, hi_cap=128) == 128
+
+
+def test_derive_accumulation_invariants():
+    for logical, max_phys in [(256, 96), (256, 64), (8, 64), (7, 2), (1, 1)]:
+        physical, steps = derive_accumulation(logical, max_phys)
+        assert physical <= max_phys
+        assert physical * steps >= logical
+        # steps is minimal: one fewer microstep cannot cover the logical batch
+        assert (steps - 1) * max_phys < logical
+    with pytest.raises(ValueError):
+        derive_accumulation(0, 4)
+    with pytest.raises(ValueError):
+        derive_accumulation(4, 0)
+
+
+# --------------------------------------------- end-to-end correctness oracle --
+class TwoLayer:
+    """Tiny model with one ghost-leaning and one instantiate-leaning tap."""
+
+    def __init__(self):
+        self.f1 = Dense("f1", 12, 8)
+        self.f2 = Dense("f2", 8, 4)
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"f1": self.f1.init(k1), "f2": self.f2.init(k2)}
+
+    def loss_with_ctx(self, params, batch, ctx: Ctx):
+        h = jax.nn.relu(self.f1(params["f1"], batch["x"], ctx.scope("f1")))
+        out = self.f2(params["f2"], h, ctx.scope("f2"))
+        return jnp.mean((out - batch["y"]) ** 2, axis=(1, 2))
+
+
+def _two_layer_setup():
+    model = TwoLayer()
+    params = model.init(jax.random.PRNGKey(0))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    batch = {
+        "x": jax.random.normal(k1, (4, 6, 12)),
+        "y": jax.random.normal(k2, (4, 6, 4)),
+    }
+    return model, params, batch
+
+
+@pytest.mark.parametrize("mode", ["mixed_ghost", "mixed_ghost_taps", "bk_mixed"])
+def test_plan_changes_branch_not_math(mode):
+    """Clipped grads under an adversarially flipped plan == analytic exactly."""
+    model, params, batch = _two_layer_setup()
+    metas = discover_meta(model.loss_with_ctx, params, batch)
+    flipped = ClipPlan(
+        fingerprint=shape_fingerprint(metas),
+        device=device_string(),
+        branches=tuple(
+            (n, "instantiate" if decide(m, mode="mixed_ghost") == "ghost" else "ghost")
+            for n, m in sorted(metas.items()) if m.kind == "matmul"
+        ),
+    )
+    f_analytic = dp_value_and_clipped_grad(model.loss_with_ctx, ClipConfig(mode=mode))
+    f_plan = dp_value_and_clipped_grad(
+        model.loss_with_ctx, ClipConfig(mode=mode, plan=flipped)
+    )
+    l1, g1, a1 = f_analytic(params, batch)
+    l2, g2, a2 = f_plan(params, batch)
+    assert float(l1) == float(l2)
+    assert jnp.allclose(a1["per_sample_norms"], a2["per_sample_norms"], atol=1e-5)
+    assert max_tree_diff(g1, g2) < 1e-5
+
+
+def test_measured_plan_round_trips_through_engine(tmp_path):
+    """build_plan -> save -> ClipConfig(plan=...) produces analytic-equal grads."""
+    model, params, batch = _two_layer_setup()
+    metas = discover_meta(model.loss_with_ctx, params, batch)
+    plan = build_plan(
+        metas, measure=MeasureConfig(repeats=1, warmup=1), arch="twolayer"
+    )
+    assert set(plan.branch_map()) == {
+        n for n, m in metas.items() if m.kind == "matmul"
+    }
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    plan = ClipPlan.load(path)
+
+    f_analytic = jax.jit(
+        dp_value_and_clipped_grad(model.loss_with_ctx, ClipConfig())
+    )
+    f_plan = jax.jit(
+        dp_value_and_clipped_grad(model.loss_with_ctx, ClipConfig(plan=plan))
+    )
+    _, g1, _ = f_analytic(params, batch)
+    _, g2, _ = f_plan(params, batch)
+    assert max_tree_diff(g1, g2) < 1e-5
+
+
+def test_engine_tune_cache_hit(tmp_path, monkeypatch):
+    """A second tune() for the same (arch, device, shapes) skips profiling."""
+    from repro.core.engine import PrivacyEngine
+
+    monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path))
+    model, params, batch = _two_layer_setup()
+    eng = PrivacyEngine(
+        loss_with_ctx=model.loss_with_ctx, batch_size=4, sample_size=1000,
+        steps=10, max_grad_norm=1.0, noise_multiplier=1.0,
+    )
+    p1 = eng.tune(params, batch, arch="twolayer", search_max_batch=False,
+                  measure=MeasureConfig(repeats=1, warmup=1))
+    p2 = eng.tune(params, batch, arch="twolayer", search_max_batch=False,
+                  measure=MeasureConfig(repeats=1, warmup=1))
+    assert p1 == p2  # identical object state: timings were not re-measured
+    assert eng.plan == p1
+    # use_cache=False forces a re-measure (timings will differ)
+    p3 = eng.tune(params, batch, arch="twolayer", search_max_batch=False,
+                  measure=MeasureConfig(repeats=1, warmup=1), use_cache=False,
+                  plan_path=None)
+    assert p3.fingerprint == p1.fingerprint
+
+
+def test_noise_finalize_non_private_matches_train_step():
+    """Accumulation finalize must not noise/rescale non_private runs."""
+    from repro.launch.steps import DPTrainConfig, make_noise_finalize
+    from repro.optim import adam, warmup_cosine
+
+    model, params, batch = _two_layer_setup()
+    opt = adam()
+    dp = DPTrainConfig(clipping_mode="non_private", noise_multiplier=123.0,
+                       logical_batch=4)
+    fin = make_noise_finalize(opt, warmup_cosine(1e-3, 1, 10), dp)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32), "rng": jax.random.PRNGKey(0)}
+    grads = jax.tree_util.tree_map(jnp.ones_like, params)
+    out1 = fin(dict(state), grads)
+    out2 = fin(dict(state), grads)
+    # no Gaussian noise: identical grads give identical (deterministic) updates
+    assert max_tree_diff(out1["params"], out2["params"]) == 0.0
+
+
+def test_max_batch_by_memory_monotone_model():
+    model, params, batch = _two_layer_setup()
+    grad_fn = dp_value_and_clipped_grad(model.loss_with_ctx, ClipConfig())
+    # generous budget: search caps out at hi_cap
+    assert max_batch_by_memory(
+        grad_fn, params, batch, budget_bytes=1 << 34, hi_cap=8
+    ) == 8
+    # zero budget: nothing fits
+    assert max_batch_by_memory(
+        grad_fn, params, batch, budget_bytes=0, hi_cap=8
+    ) == 0
