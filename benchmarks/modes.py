@@ -1,0 +1,70 @@
+"""Mode trajectory benchmark: non_private vs mixed_ghost vs fused bk_mixed.
+
+The repo's two headline claims ride on this comparison (table4 CNN config):
+
+- ``mixed_ghost`` reproduces the paper — small memory overhead, one extra
+  backward pass;
+- fused ``bk_mixed`` (book-keeping on the probe engine) must be *strictly
+  faster per step* than ``mixed_ghost`` while keeping peak memory within
+  ~10% of ``non_private`` — no tap-sized zeros, no activation dict, no
+  second backward.
+
+``benchmarks/run.py`` writes the rows to ``BENCH_modes.json`` so the perf
+trajectory accumulates across PRs.  Each row's derived field carries the
+peak-memory model and the ratios the acceptance gates read.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import (
+    SmallCNN,
+    cnn_batch,
+    compiled_memory_bytes,
+    time_fn,
+)
+
+MODES_TRACKED = ("non_private", "mixed_ghost", "bk_mixed")
+
+
+def run(batch: int = 64, image: int = 32) -> list[tuple[str, float, str]]:
+    from repro.core.clipping import ClipConfig, dp_value_and_clipped_grad
+
+    model = SmallCNN()
+    params = model.init(jax.random.PRNGKey(0))
+    batch_data = cnn_batch(batch, image)
+    specs = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), (params, batch_data)
+    )
+    rows = []
+    stats: dict[str, tuple[float, int]] = {}
+    for mode in MODES_TRACKED:
+        raw_fn = dp_value_and_clipped_grad(
+            model.loss_with_ctx, ClipConfig(mode=mode, clip_norm=1.0)
+        )
+        t = time_fn(jax.jit(raw_fn), params, batch_data)
+        mem = compiled_memory_bytes(raw_fn, *specs)
+        stats[mode] = (t, mem)
+        rows.append(
+            (f"modes_cnn_b{batch}_{mode}", t * 1e6, f"mem_mb={mem / 1e6:.1f}")
+        )
+
+    np_t, np_mem = stats["non_private"]
+    mg_t, _ = stats["mixed_ghost"]
+    bk_t, bk_mem = stats["bk_mixed"]
+    rows.append((
+        f"modes_cnn_b{batch}_bk_vs_mixed_speedup",
+        0.0,
+        f"step_time_ratio={mg_t / bk_t:.3f}",  # > 1 == bk strictly faster
+    ))
+    rows.append((
+        f"modes_cnn_b{batch}_bk_vs_np_memory",
+        0.0,
+        f"peak_mem_ratio={bk_mem / np_mem:.3f}",  # <= 1.10 == within 10%
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -27,6 +27,7 @@ def main() -> None:
 
     from benchmarks import (
         fig3_memory_curve,
+        modes,
         roofline,
         table1_complexity,
         table3_decision,
@@ -42,6 +43,7 @@ def main() -> None:
         "table5": lambda: table5_accuracy.run(steps=10 if args.fast else 30),
         "table7": lambda: table7_max_batch.run(),
         "fig3": lambda: fig3_memory_curve.run(fast=args.fast),
+        "modes": lambda: modes.run(batch=32 if args.fast else 64),
         "roofline": lambda: roofline.run("single") + roofline.run("multi"),
     }
     if args.only:

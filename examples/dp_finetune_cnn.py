@@ -65,6 +65,9 @@ if args.tune:
     )
     measured = plan.branch_map()
     print(f"\ntuned on {plan.device}: max physical batch = {plan.physical_batch}")
+    print(f"three-way verdict: mixed_ghost={plan.mode_cost_us('mixed_ghost'):.0f}us "
+          f"bk_mixed={plan.mode_cost_us('bk_mixed'):.0f}us per step "
+          f"-> recommended mode: {plan.recommended_mode()}")
 
 print("\nlayerwise decision (Eq 4.1%s):" % (" vs measured" if measured else ""))
 for name, m in sorted(meta.items()):

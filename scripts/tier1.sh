@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 smoke gate: the full pytest suite plus a fast benchmark pass that
-# exercises the complexity model (table1) and the Eq-4.1 decision (table3).
+# exercises the complexity model (table1), the Eq-4.1 decision (table3), and
+# the mode trajectory non_private / mixed_ghost / fused bk_mixed (modes ->
+# BENCH_modes.json).
 #
 #   bash scripts/tier1.sh
 set -euo pipefail
@@ -10,4 +12,4 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python -m pytest -x -q
-python -m benchmarks.run --fast --only table1,table3 --out-dir "${BENCH_OUT:-.}"
+python -m benchmarks.run --fast --only table1,table3,modes --out-dir "${BENCH_OUT:-.}"

@@ -1,38 +1,78 @@
 """Per-sample gradient clipping engines (the paper's Algorithm 1 and rivals).
 
 The model exposes ``loss_with_ctx(params, batch, ctx) -> per_sample_losses``;
-everything else happens here.  Modes:
+everything else happens here.  Every mode is a ``ClipExecutor`` — one shared
+three-stage pipeline
 
+    norms stage    -> per-sample squared norms (mode-specific machinery)
+    factor stage   -> C_i = clip_fn(||g_i||, R) * mask     (shared)
+    gradient stage -> sum_i C_i g_i                        (mode-specific)
+
+Modes
+-----
 - ``vmap``        Opacus analogue: materialize per-sample grads via
                   vmap(grad), clip, sum.  O(B x |params|) memory.
 - ``ghost``       ghost norm everywhere + second backward pass.
 - ``fastgradclip``  instantiation norms + second backward pass.
 - ``mixed_ghost`` the paper's Algorithm 1: Eq-(4.1) layerwise decision
                   between ghost norm and instantiation + second backward.
-- ``bk_mixed``    beyond-paper: mixed norms + weighted gradient as direct
-                  einsums (book-keeping, arXiv:2210.00038) — no second
-                  backward; DP cost ~= non-private cost.
+- ``bk_mixed``    beyond-paper: book-keeping (arXiv:2210.00038) — the fused
+                  probes bank per-sample gradients (or the (a, g) book) during
+                  the single backward pass and the gradient stage is a direct
+                  einsum against the clip factors.  No second backward; DP
+                  cost ~= non-private cost.
+- ``*_taps``      thin reference executors on the explicit-tap engine
+                  (zero taps + activation dict); the exactness oracle for the
+                  fused engine and the fallback for experimentation.
+- ``non_private`` no clipping (C_i = 1); the baseline every overhead claim is
+                  measured against.
 
 All modes produce bit-identical clipped gradients (tested): the paper's claim
 that the implementation "does not affect the mathematics".
 
-Flow for the ghost family (1 forward + 2 backward, Fig. 1 right):
+Mode selection guide
+--------------------
+Which engine wins depends on {memory budget, architecture, device}:
 
-    (losses, acts), pullback = vjp(f, params, taps)   # taps = zeros
-    _, gs      = pullback(ones)     # dL/ds per tap; dW einsums DCE'd by XLA
-    norms2     = sum_tap tap_norm_sq(acts, gs)        # ghost / instantiate
+- **Tight memory budget** (the paper's ≤10%-overhead regime — large CNNs or
+  long sequences on small devices): ``mixed_ghost``.  The fused probes keep
+  per-layer cotangents inside the backward scan, the Eq-(4.1) decision never
+  materializes a large branch, and the second backward reuses residuals
+  instead of banking anything.
+- **Throughput-bound training with headroom** (fine-tuning, mid-size models,
+  accelerators with spare HBM): ``bk_mixed``.  It trades the whole second
+  backward for per-tap banks (per-sample grads where pD is small, the (a, g)
+  book where it is not); per-step time approaches ``non_private`` while peak
+  memory stays within ~10% of it on conv nets (see BENCH_modes.json).
+- **Unknown hardware**: run ``repro.tuner`` — it times ghost / instantiate /
+  book-keeping per tap on the device and writes a ClipPlan whose
+  ``recommended_mode()`` settles the question with measurements; ``launch.train
+  --tune --mode auto`` adopts it end to end.
+- **Debugging / cross-checking**: ``vmap`` (the oracle, tiny models only) and
+  the ``*_taps`` reference executors.
+
+Flow for the fused second-backward family (1 forward + 2 backward, Fig. 1
+right)::
+
+    (losses, acts), pullback = vjp(f, params, banks)  # banks = dummy zeros
+    _, nb, gs  = pullback(ones)     # per-tap banks {"n": norms^2} via probes
+    norms2     = sum_tap nb[tap]["n"]
     C          = clip_fn(sqrt(norms2), R) * mask
     grads, _   = pullback(C)        # == grad of sum_i C_i L_i  (2nd backward)
+
+``bk_mixed`` runs the same pipeline but its banks also carry the weighted-
+gradient residuals, and the gradient stage is ``bank_weighted_grads`` —
+no tap-sized zeros, no activation dict, no second backward.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import fused as fused_mod
 from repro.core import ghost
 from repro.core.functions import get_clip_fn
 from repro.core.taps import ClipRuntime, Ctx, TapMeta, make_zero_taps
@@ -40,12 +80,12 @@ from repro.utils.tree import flatten_dict, unflatten_dict
 
 LossFn = Callable[..., jax.Array]  # (params, batch, ctx) -> (B,) losses
 
-# fused engine: ghost | fastgradclip | mixed_ghost (probe-based, default)
-# explicit-tap engine: bk_mixed (book-keeping) and *_taps reference variants
+# fused engine: ghost | fastgradclip | mixed_ghost | bk_mixed (probe-based)
+# explicit-tap engine: *_taps reference variants
 MODES = (
-    "vmap", "ghost", "fastgradclip", "mixed_ghost",
-    "ghost_taps", "fastgradclip_taps", "mixed_ghost_taps",
-    "bk_mixed", "non_private",
+    "vmap", "ghost", "fastgradclip", "mixed_ghost", "bk_mixed",
+    "ghost_taps", "fastgradclip_taps", "mixed_ghost_taps", "bk_mixed_taps",
+    "non_private",
 )
 
 
@@ -60,17 +100,26 @@ class ClipConfig:
     # taps whose params are frozen (no clipping/noise/coverage requirement)
     frozen_prefixes: tuple[str, ...] = ()
     # measured-cost branch plan (repro.tuner.ClipPlan, duck-typed to keep
-    # core free of tuner imports).  Consulted before the analytic Eq-(4.1)
+    # core free of tuner imports).  Consulted before the analytic branch
     # rule; a plan whose device/shape fingerprint does not match the model
     # is rejected at trace time and the analytic rule applies.
     plan: Optional[Any] = None
 
 
-def _plan_overrides(plan: Optional[Any], meta: dict[str, TapMeta]) -> dict[str, str]:
-    """Validated per-tap branch overrides from a tuner plan ({} if stale)."""
+def _plan_overrides(
+    plan: Optional[Any], meta: dict[str, TapMeta], mode: str
+) -> dict[str, str]:
+    """Validated per-tap branch overrides from a tuner plan ({} if stale).
+
+    Plans are mode-specific: the book-keeping branch trades bank size, not
+    norm cost, so ``bk_mixed`` consumes a different branch map than
+    ``mixed_ghost``.  ``plan.overrides_for`` must dispatch on the mode —
+    a mode-blind plan object would silently drive bank-size decisions with
+    norm-cost winners, so there is deliberately no fallback signature.
+    """
     if plan is None:
         return {}
-    return plan.overrides_for(meta)
+    return plan.overrides_for(meta, mode=mode)
 
 
 def discover_meta(
@@ -93,17 +142,32 @@ def validate_coverage(
     """Every trainable param leaf must be covered by exactly one tap.
 
     Uncovered parameters would silently escape clipping — a privacy bug —
-    so callers should raise unless the leaf is declared frozen.
+    so callers should raise unless the leaf is declared frozen.  Duplicate
+    coverage (two taps claiming the same param leaf) would silently
+    double-count that leaf's per-sample norm, inflating ||g_i|| and
+    over-clipping — also a correctness bug — so it raises here directly,
+    naming the offending taps.  Returns the sorted list of uncovered paths.
     """
     flat = flatten_dict(params)
-    covered = set()
-    for m in meta.values():
-        covered.add(m.param_path)
+    claimed: dict[str, list[str]] = {}
+    for name, m in meta.items():
+        claimed.setdefault(m.param_path, []).append(name)
         if m.bias_path:
-            covered.add(m.bias_path)
+            claimed.setdefault(m.bias_path, []).append(name)
+    duplicates = {
+        path: names for path, names in claimed.items() if len(names) > 1
+    }
+    if duplicates:
+        detail = "; ".join(
+            f"{path} <- taps {sorted(names)}" for path, names in sorted(duplicates.items())
+        )
+        raise ValueError(
+            "duplicate per-sample clipping coverage (norms would be "
+            f"double-counted): {detail}"
+        )
     missing = []
     for path in flat:
-        if path in covered:
+        if path in claimed:
             continue
         if any(path.startswith(p) for p in frozen_prefixes):
             continue
@@ -117,140 +181,248 @@ def _batch_mask(batch: Any) -> Optional[jax.Array]:
     return None
 
 
-def dp_value_and_clipped_grad(
-    loss_with_ctx: LossFn,
-    cfg: ClipConfig = ClipConfig(),
-) -> Callable[[Any, Any], tuple[jax.Array, Any, dict]]:
-    """Returns fn(params, batch) -> (mean_loss, clipped_grad_sum, aux).
+def _assemble_bk_grads(
+    meta: dict[str, TapMeta], params: Any, ws_fn: Callable
+) -> Any:
+    """Shared book-keeping gradient assembly (fused and reference engines).
 
-    ``clipped_grad_sum`` is sum_i C_i g_i (noise is added by the optimizer /
-    privacy engine; keeping it separate lets benchmarks isolate clipping).
-    aux = {"per_sample_norms": (B,), "clip_factors": (B,)}.
+    ``ws_fn(name, m, param_shape)`` yields one tap's {path: weighted grad};
+    uncovered leaves (frozen params) are zero-filled and everything is cast
+    back to the leaf dtype.  Contributions to the same leaf are summed
+    defensively, but two taps on one param leaf is a coverage bug —
+    ``validate_coverage`` raises on it because the summed per-tap squared
+    norms would drop the cross term.
     """
-    clip_fn = get_clip_fn(cfg.clip_fn)
-
-    if cfg.mode == "non_private":
-
-        def np_fn(params, batch):
-            def mean_loss(p):
-                losses = loss_with_ctx(p, batch, Ctx.disabled())
-                return jnp.sum(losses), losses
-
-            (total, losses), grads = jax.value_and_grad(mean_loss, has_aux=True)(params)
-            b = losses.shape[0]
-            aux = {
-                "per_sample_norms": jnp.zeros((b,), jnp.float32),
-                "clip_factors": jnp.ones((b,), jnp.float32),
-            }
-            return total / b, grads, aux
-
-        return np_fn
-
-    if cfg.mode == "vmap":
-
-        def vmap_fn(params, batch):
-            mask = _batch_mask(batch)
-
-            def single(p, ex):
-                losses = loss_with_ctx(p, ex, Ctx.disabled())
-                return losses[0]
-
-            # add a singleton batch dim per sample
-            per_ex = jax.tree_util.tree_map(lambda x: x[:, None], batch)
-            losses, grads = jax.vmap(
-                lambda ex: jax.value_and_grad(single, argnums=0)(params, ex)
-            )(per_ex)
-            flat, tdef = jax.tree_util.tree_flatten(grads)
-            norms2 = sum(
-                jnp.sum(
-                    jnp.square(g.astype(jnp.float32)).reshape(g.shape[0], -1), axis=-1
-                )
-                for g in flat
+    flat_params = flatten_dict(params)
+    flat_grads: dict[str, jax.Array] = {}
+    for name, m in meta.items():
+        ws = ws_fn(name, m, flat_params[m.param_path].shape)
+        for path, val in ws.items():
+            flat_grads[path] = (
+                flat_grads[path] + val if path in flat_grads else val
             )
-            norms = jnp.sqrt(norms2)
-            c = clip_fn(norms, cfg.clip_norm)
-            if mask is not None:
-                c = c * mask.astype(c.dtype)
-            clipped = jax.tree_util.tree_map(
-                lambda g: jnp.einsum(
-                    "b...,b->...", g.astype(jnp.float32), c
-                ).astype(g.dtype),
-                grads,
+    for path, leaf in flat_params.items():
+        if path not in flat_grads:
+            flat_grads[path] = jnp.zeros_like(leaf)
+        else:
+            flat_grads[path] = flat_grads[path].astype(leaf.dtype)
+    return unflatten_dict(flat_grads)
+
+
+@dataclasses.dataclass
+class _NormState:
+    """What the norms stage hands the gradient stage (one step's plumbing)."""
+
+    losses: jax.Array
+    norms2: jax.Array
+    pull: Optional[Callable] = None  # vjp pullback (second-backward modes)
+    banks: Optional[dict] = None  # per-tap probe cotangents (fused engine)
+    acts: Optional[dict] = None  # explicit activations (taps engine / late)
+    gs: Optional[dict] = None  # explicit tap cotangents
+    meta: Optional[dict] = None
+    per_sample_grads: Optional[Any] = None  # vmap oracle only
+
+
+class ClipExecutor:
+    """Template for every clipping mode: norms -> clip factors -> gradients.
+
+    Subclasses implement ``_norm_state`` and ``_weighted_grads``; the factor
+    stage and the (loss, grads, aux) contract are shared.  Instances are
+    plain callables: ``fn(params, batch) -> (mean_loss, clipped_grad_sum,
+    aux)`` with aux = {"per_sample_norms": (B,), "clip_factors": (B,)} —
+    jit/pjit-safe, noise added downstream by the privacy engine.
+    """
+
+    def __init__(self, loss_with_ctx: LossFn, cfg: ClipConfig):
+        self.loss = loss_with_ctx
+        self.cfg = cfg
+        self.clip_fn = get_clip_fn(cfg.clip_fn)
+
+    # -- stage 1: mode-specific -------------------------------------------
+    def _norm_state(self, params, batch) -> _NormState:
+        raise NotImplementedError
+
+    # -- stage 2: shared ---------------------------------------------------
+    def _clip_factors(self, norms: jax.Array, mask) -> jax.Array:
+        c = self.clip_fn(norms, self.cfg.clip_norm)
+        if mask is not None:
+            c = c * mask.astype(c.dtype)
+        return jax.lax.stop_gradient(c)
+
+    # -- stage 3: mode-specific -------------------------------------------
+    def _weighted_grads(self, st: _NormState, c: jax.Array, params) -> Any:
+        raise NotImplementedError
+
+    def __call__(self, params, batch):
+        mask = _batch_mask(batch)
+        st = self._norm_state(params, batch)
+        norms = jnp.sqrt(st.norms2)
+        c = self._clip_factors(norms, mask)
+        grads = self._weighted_grads(st, c, params)
+        b = st.losses.shape[0]
+        aux = {"per_sample_norms": norms, "clip_factors": c}
+        return jnp.sum(st.losses) / b, grads, aux
+
+
+class NonPrivateExecutor(ClipExecutor):
+    """C_i = 1 for all i: plain summed gradients through the same skeleton."""
+
+    def _norm_state(self, params, batch) -> _NormState:
+        losses, pull = jax.vjp(
+            lambda p: self.loss(p, batch, Ctx.disabled()), params
+        )
+        return _NormState(
+            losses=losses,
+            norms2=jnp.zeros((losses.shape[0],), jnp.float32),
+            pull=pull,
+        )
+
+    def _clip_factors(self, norms, mask):
+        return jnp.ones_like(norms)
+
+    def _weighted_grads(self, st, c, params):
+        (grads,) = st.pull(c.astype(st.losses.dtype))
+        return grads
+
+
+class VmapExecutor(ClipExecutor):
+    """Opacus analogue and correctness oracle: vmap(grad) per sample."""
+
+    def _norm_state(self, params, batch) -> _NormState:
+        def single(p, ex):
+            losses = self.loss(p, ex, Ctx.disabled())
+            return losses[0]
+
+        # add a singleton batch dim per sample
+        per_ex = jax.tree_util.tree_map(lambda x: x[:, None], batch)
+        losses, grads = jax.vmap(
+            lambda ex: jax.value_and_grad(single, argnums=0)(params, ex)
+        )(per_ex)
+        flat, _ = jax.tree_util.tree_flatten(grads)
+        norms2 = sum(
+            jnp.sum(
+                jnp.square(g.astype(jnp.float32)).reshape(g.shape[0], -1), axis=-1
             )
-            b = losses.shape[0]
-            aux = {"per_sample_norms": norms, "clip_factors": c}
-            return jnp.sum(losses) / b, clipped, aux
+            for g in flat
+        )
+        return _NormState(losses=losses, norms2=norms2, per_sample_grads=grads)
 
-        return vmap_fn
+    def _weighted_grads(self, st, c, params):
+        return jax.tree_util.tree_map(
+            lambda g: jnp.einsum(
+                "b...,b->...", g.astype(jnp.float32), c
+            ).astype(g.dtype),
+            st.per_sample_grads,
+        )
 
-    # --- fused ghost family (default): norms inside the backward pass -----
-    if cfg.mode in ("ghost", "fastgradclip", "mixed_ghost"):
-        base_runtime = ClipRuntime(
+
+def _fold_bank_norm(n: jax.Array, b: int) -> jax.Array:
+    """Stacked (L..., B) per-sample norm cotangents -> (B,) sums."""
+    return n.astype(jnp.float32).reshape(-1, b).sum(axis=0)
+
+
+class FusedExecutor(ClipExecutor):
+    """Probe engine: norms (and bk banks) computed inside the backward pass.
+
+    Covers ghost / fastgradclip / mixed_ghost (gradient stage = second
+    backward over the shared pullback) and bk_mixed (gradient stage = bank
+    einsums; the single backward is all the backpropagation there is).
+    Taps registered with ``late=True`` (recurrent weights whose activation
+    only exists after the time scan) fall back to the explicit-tap channel
+    within the same pipeline.
+    """
+
+    def __init__(self, loss_with_ctx: LossFn, cfg: ClipConfig):
+        super().__init__(loss_with_ctx, cfg)
+        self.base_runtime = ClipRuntime(
             mode=cfg.mode, decision_by=cfg.decision_by,
             ghost_block=cfg.ghost_block, inst_block_d=cfg.inst_block_d,
         )
 
-        def fused_fn(params, batch):
-            mask = _batch_mask(batch)
-            meta = discover_meta(loss_with_ctx, params, batch, clip=base_runtime)
-            overrides = _plan_overrides(cfg.plan, meta)
-            runtime = dataclasses.replace(
-                base_runtime, overrides=tuple(sorted(overrides.items()))
+    @property
+    def is_bk(self) -> bool:
+        return self.cfg.mode == "bk_mixed"
+
+    def _norm_state(self, params, batch) -> _NormState:
+        cfg = self.cfg
+        meta = discover_meta(self.loss, params, batch, clip=self.base_runtime)
+        overrides = _plan_overrides(cfg.plan, meta, cfg.mode)
+        runtime = dataclasses.replace(
+            self.base_runtime, overrides=tuple(sorted(overrides.items()))
+        )
+        zs0 = {
+            name: fused_mod.make_bank_zeros(
+                fused_mod.bank_struct(
+                    m, mode=cfg.mode, decision_by=cfg.decision_by,
+                    override=overrides.get(name),
+                )
             )
-            zs0 = {
-                name: jnp.zeros(m.stack_dims + (m.batch_size,), jnp.float32)
-                for name, m in meta.items() if m.fused
-            }
-            taps0 = {
-                name: jnp.zeros(m.s_shape, m.s_dtype)
-                for name, m in meta.items() if not m.fused
-            }
+            for name, m in meta.items() if m.fused
+        }
+        taps0 = make_zero_taps({n: m for n, m in meta.items() if not m.fused})
 
-            def f(p, zs, taps):
-                ctx = Ctx(taps=taps, zs=zs, meta={}, clip=runtime)
-                losses = loss_with_ctx(p, batch, ctx)
-                return losses, ctx.acts
+        def f(p, zs, taps):
+            ctx = Ctx(taps=taps, zs=zs, meta={}, clip=runtime)
+            losses = self.loss(p, batch, ctx)
+            return losses, ctx.acts
 
-            losses, pull, acts = jax.vjp(f, params, zs0, taps0, has_aux=True)
-            b = losses.shape[0]
-            ones = jnp.ones_like(losses)
-            _, z_cots, gs_late = pull(ones)  # param grads DCE'd
+        losses, pull, acts = jax.vjp(f, params, zs0, taps0, has_aux=True)
+        b = losses.shape[0]
+        ones = jnp.ones_like(losses)
+        _, banks, gs_late = pull(ones)  # param grads DCE'd
 
-            norms2 = jnp.zeros((b,), jnp.float32)
-            for name, m in meta.items():
-                if m.fused:
-                    zc = z_cots[name].astype(jnp.float32)
-                    norms2 = norms2 + zc.reshape(-1, b).sum(axis=0)
-                else:
-                    norms2 = norms2 + ghost.tap_norm_sq(
-                        m, acts.get(name), gs_late[name],
-                        mode=cfg.mode, decision_by=cfg.decision_by,
-                        ghost_block=cfg.ghost_block, inst_block_d=cfg.inst_block_d,
-                        override=overrides.get(name),
-                    )
-            norms = jnp.sqrt(norms2)
-            c = clip_fn(norms, cfg.clip_norm)
-            if mask is not None:
-                c = c * mask.astype(c.dtype)
-            c = jax.lax.stop_gradient(c)
-            clipped, _, _ = pull(c.astype(losses.dtype))  # second backward
-            aux = {"per_sample_norms": norms, "clip_factors": c}
-            return jnp.sum(losses) / b, clipped, aux
+        norms2 = jnp.zeros((b,), jnp.float32)
+        for name, m in meta.items():
+            if m.fused:
+                norms2 = norms2 + _fold_bank_norm(banks[name]["n"], b)
+            else:
+                norms2 = norms2 + ghost.tap_norm_sq(
+                    m, acts.get(name), gs_late[name],
+                    mode=cfg.mode, decision_by=cfg.decision_by,
+                    ghost_block=cfg.ghost_block, inst_block_d=cfg.inst_block_d,
+                    override=overrides.get(name),
+                )
+        return _NormState(
+            losses=losses, norms2=norms2, pull=pull, banks=banks,
+            acts=acts, gs=gs_late, meta=meta,
+        )
 
-        return fused_fn
+    def _weighted_grads(self, st, c, params):
+        if not self.is_bk:
+            clipped, _, _ = st.pull(c.astype(st.losses.dtype))  # 2nd backward
+            return clipped
 
-    # --- explicit-tap engine: bk_mixed and *_taps reference variants -------
-    branch_mode = cfg.mode.replace("_taps", "")
+        # book-keeping: direct einsums from the banks; nothing re-propagates
+        def ws_fn(name, m, param_shape):
+            if m.fused:
+                return ghost.bank_weighted_grads(m, st.banks[name], c, param_shape)
+            return ghost.tap_weighted_grads(
+                m, st.acts.get(name), st.gs[name], c, param_shape
+            )
 
-    def ghost_fn(params, batch):
-        mask = _batch_mask(batch)
-        meta = discover_meta(loss_with_ctx, params, batch)
-        overrides = _plan_overrides(cfg.plan, meta)
+        return _assemble_bk_grads(st.meta, params, ws_fn)
+
+
+class TapsExecutor(ClipExecutor):
+    """Reference explicit-tap engine (``*_taps`` modes).
+
+    Materializes zero taps and an activation dict — the memory-hungry but
+    transparent formulation the fused engine is tested against.
+    """
+
+    def __init__(self, loss_with_ctx: LossFn, cfg: ClipConfig):
+        super().__init__(loss_with_ctx, cfg)
+        self.branch_mode = cfg.mode.replace("_taps", "")
+
+    def _norm_state(self, params, batch) -> _NormState:
+        cfg = self.cfg
+        meta = discover_meta(self.loss, params, batch)
+        overrides = _plan_overrides(cfg.plan, meta, self.branch_mode)
         taps0 = make_zero_taps(meta)
 
         def f(p, taps):
             ctx = Ctx(taps=taps, meta={})
-            losses = loss_with_ctx(p, batch, ctx)
+            losses = self.loss(p, batch, ctx)
             return losses, ctx.acts
 
         losses, pull, acts = jax.vjp(f, params, taps0, has_aux=True)
@@ -261,42 +433,54 @@ def dp_value_and_clipped_grad(
         norms2 = jnp.zeros((b,), jnp.float32)
         for name, m in meta.items():
             norms2 = norms2 + ghost.tap_norm_sq(
-                m,
-                acts.get(name),
-                gs[name],
-                mode=branch_mode,
-                decision_by=cfg.decision_by,
-                ghost_block=cfg.ghost_block,
-                inst_block_d=cfg.inst_block_d,
+                m, acts.get(name), gs[name],
+                mode=self.branch_mode, decision_by=cfg.decision_by,
+                ghost_block=cfg.ghost_block, inst_block_d=cfg.inst_block_d,
                 override=overrides.get(name),
             )
-        norms = jnp.sqrt(norms2)
-        c = clip_fn(norms, cfg.clip_norm)
-        if mask is not None:
-            c = c * mask.astype(c.dtype)
-        c = jax.lax.stop_gradient(c)
+        return _NormState(
+            losses=losses, norms2=norms2, pull=pull, acts=acts, gs=gs,
+            meta=meta,
+        )
 
-        if cfg.mode == "bk_mixed":
-            flat_params = flatten_dict(params)
-            flat_grads: dict[str, jax.Array] = {}
-            for name, m in meta.items():
-                ws = ghost.tap_weighted_grads(
-                    m, acts.get(name), gs[name], c, flat_params[m.param_path].shape
-                )
-                for path, val in ws.items():
-                    flat_grads[path] = (
-                        flat_grads[path] + val if path in flat_grads else val
-                    )
-            for path, leaf in flat_params.items():
-                if path not in flat_grads:
-                    flat_grads[path] = jnp.zeros_like(leaf)
-                else:
-                    flat_grads[path] = flat_grads[path].astype(leaf.dtype)
-            clipped = unflatten_dict(flat_grads)
-        else:
-            clipped, _ = pull(c.astype(losses.dtype))  # second backward
+    def _weighted_grads(self, st, c, params):
+        if self.branch_mode != "bk_mixed":
+            clipped, _ = st.pull(c.astype(st.losses.dtype))  # second backward
+            return clipped
+        return _assemble_bk_grads(
+            st.meta, params,
+            lambda name, m, shape: ghost.tap_weighted_grads(
+                m, st.acts.get(name), st.gs[name], c, shape
+            ),
+        )
 
-        aux = {"per_sample_norms": norms, "clip_factors": c}
-        return jnp.sum(losses) / b, clipped, aux
 
-    return ghost_fn
+_EXECUTORS = {
+    "non_private": NonPrivateExecutor,
+    "vmap": VmapExecutor,
+    "ghost": FusedExecutor,
+    "fastgradclip": FusedExecutor,
+    "mixed_ghost": FusedExecutor,
+    "bk_mixed": FusedExecutor,
+    "ghost_taps": TapsExecutor,
+    "fastgradclip_taps": TapsExecutor,
+    "mixed_ghost_taps": TapsExecutor,
+    "bk_mixed_taps": TapsExecutor,
+}
+
+
+def dp_value_and_clipped_grad(
+    loss_with_ctx: LossFn,
+    cfg: ClipConfig = ClipConfig(),
+) -> Callable[[Any, Any], tuple[jax.Array, Any, dict]]:
+    """Returns fn(params, batch) -> (mean_loss, clipped_grad_sum, aux).
+
+    ``clipped_grad_sum`` is sum_i C_i g_i (noise is added by the optimizer /
+    privacy engine; keeping it separate lets benchmarks isolate clipping).
+    aux = {"per_sample_norms": (B,), "clip_factors": (B,)}.
+    """
+    try:
+        executor_cls = _EXECUTORS[cfg.mode]
+    except KeyError:
+        raise ValueError(f"unknown clipping mode {cfg.mode!r}; have {MODES}")
+    return executor_cls(loss_with_ctx, cfg)

@@ -6,6 +6,7 @@ B = batch, T = output positions, D = fan-in (d*kh*kw), p = fan-out.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 from repro.core.taps import TapMeta
@@ -48,6 +49,31 @@ def ghost_is_cheaper(T: int, D: int, p: int, *, by: str = "space") -> bool:
     return 2 * T * T < p * D
 
 
+def bk_bank_prefers_ghost(
+    T: int, D: int, p: int, *, groups: int = 1, a_elems: Optional[int] = None
+) -> bool:
+    """Book-keeping branch rule: which residual bank is smaller per sample?
+
+    Book-keeping (arXiv:2210.00038) skips the second backward pass, so Eq
+    (4.1) does not apply: every tap must *bank* enough of the backward pass to
+    reconstruct ``sum_i C_i g_i`` after the clip factors are known.  The two
+    banks are
+
+    - ``instantiate``: the per-sample gradients a_i^T g_i themselves
+      (G*pD elements; the per-sample norm falls out for free), or
+    - ``ghost``: the (a_i, g_i) book (``a_elems`` + G*Tp elements — for
+      convolutions ``a`` is banked *raw*, not unfolded, so the book is the
+      true activation size) plus the ghost-norm Gram tiles (~2T^2
+      transient), contracting with C_i afterwards.
+
+    Time always favours ``instantiate`` (the psg einsum doubles as the norm),
+    so — unlike Eq 4.1 — the rule is purely space-driven: bank the gradients
+    unless the (a, g) book is strictly smaller.
+    """
+    book = (a_elems if a_elems is not None else groups * T * D) + groups * T * p
+    return book + 2 * T * T < groups * D * p
+
+
 def decide(
     meta: TapMeta,
     *,
@@ -80,6 +106,17 @@ def decide(
             if override not in ("ghost", "instantiate"):
                 raise ValueError(f"invalid branch override {override!r}")
             return override
+        if mode == "bk_mixed":
+            # book-keeping banks residuals instead of paying a second
+            # backward; its branch economics are bank-size driven
+            a_elems = None
+            if meta.a_shape is not None:
+                rows = max(meta.n_stack * meta.batch_size, 1)
+                a_elems = math.prod(meta.a_shape) // rows
+            return "ghost" if bk_bank_prefers_ghost(
+                meta.T, meta.D, meta.p,
+                groups=max(meta.n_groups, 1), a_elems=a_elems,
+            ) else "instantiate"
         return "ghost" if ghost_is_cheaper(meta.T, meta.D, meta.p, by=by) else "instantiate"
     raise ValueError(f"unknown clipping mode {mode!r}")
 
@@ -111,8 +148,22 @@ def algorithm_cost(
             continue
         branch = decide(m, mode=mode if mode != "fastgradclip" else "instantiate", by=by)
         mod = ghost_norm(B, T, D, p) if branch == "ghost" else grad_instantiation(B, T, D, p)
-        second_bp = 0.0 if mode == "bk_mixed" else bp.time
-        time += reps * (3 * bp.time / 2 + mod.time + second_bp)
-        space += reps * bp.space
-        peak_clip_space = max(peak_clip_space, reps * mod.space)
+        if mode == "bk_mixed":
+            # no second backward; instead every tap banks residuals until the
+            # clip factors are known, then pays the weighted contraction.
+            # Ghost-branch taps replay the full (a, g) book (2BTDp); the
+            # instantiate branch already paid the psg einsum inside
+            # grad_instantiation, leaving only the Table-1 col-4 C_i sum.
+            if branch == "ghost":
+                wg_time = 2 * B * T * D * p
+                bank = B * T * (D + p)
+            else:
+                wg_time = weighted_grad(B, T, D, p).time
+                bank = B * p * D
+            time += reps * (3 * bp.time / 2 + mod.time + wg_time)
+            space += reps * (bp.space + bank)
+        else:
+            time += reps * (3 * bp.time / 2 + mod.time + bp.time)
+            space += reps * bp.space
+            peak_clip_space = max(peak_clip_space, reps * mod.space)
     return {"time": time, "space": space + peak_clip_space}

@@ -79,6 +79,43 @@ class PrivacyEngine:
         self.plan = plan
         self._clip_cfg = dataclasses.replace(self._clip_cfg, plan=plan)
 
+    def recertify_max_batch(
+        self, params: Any, batch: Any, *, hi_cap: int = 4096
+    ) -> Optional[Any]:
+        """Re-run the max-batch search for the engine's CURRENT mode + plan.
+
+        The physical-batch certificate is only as good as the graph it was
+        compiled from: adopting a different mode (book-keeping banks
+        residuals the searched graph never allocated) or flipping branches
+        after a re-measure both invalidate it.  Returns the plan with a
+        refreshed ``physical_batch`` (adopted via use_plan), the unchanged
+        plan when the certificate still holds, or ``None`` when nothing fits
+        the stored budget under the current configuration — the caller must
+        then fall back rather than train uncertified.
+        """
+        plan = self.plan
+        if plan is None or not getattr(plan, "budget_bytes", None):
+            return plan
+        from repro.tuner import max_batch as _mb
+
+        mp = _mb.max_batch_by_memory(
+            self.clipped_grad_fn(), params, batch,
+            budget_bytes=plan.budget_bytes, hi_cap=hi_cap,
+            reserved_bytes=_mb.resident_state_bytes(params),
+        )
+        if mp <= 0:
+            return None
+        if mp != plan.physical_batch:
+            _, steps = _mb.derive_accumulation(self.batch_size, mp)
+            log.info("re-certified max physical batch under %s: %d (was %s)",
+                     self.mode, mp, plan.physical_batch)
+            plan = plan.replace_batch(
+                physical_batch=mp, logical_batch=self.batch_size,
+                accumulation_steps=steps, budget_bytes=plan.budget_bytes,
+            )
+            self.use_plan(plan)
+        return plan
+
     def tune(
         self,
         params: Any,
@@ -91,9 +128,20 @@ class PrivacyEngine:
         hi_cap: int = 4096,
         plan_path: Optional[str] = "auto",
         use_cache: bool = True,
+        remeasure_at_physical: bool = True,
     ) -> Any:
-        """Profile ghost vs instantiate per tap on this device, search the
-        max physical microbatch, adopt and (by default) cache the ClipPlan.
+        """Profile the three-way branch decision per tap on this device,
+        search the max physical microbatch, adopt and (by default) cache the
+        ClipPlan.
+
+        Each matmul tap is timed on {ghost norm, instantiated norm,
+        book-keeping ghost-bank, book-keeping psg-bank, second-backward
+        share}; the plan carries a branch map per tuned mode plus a measured
+        ``recommended_mode``.  After the max-batch search settles,
+        ``remeasure_at_physical`` re-times the branches at the tuned
+        physical batch and only then finalizes the plan (timings scale
+        ~linearly in B, so flips are rare — re-measuring removes the
+        assumption).
 
         A valid cached plan for this (arch, device, tap shapes) is adopted
         without re-profiling (``use_cache=False`` forces a fresh measure).
@@ -105,7 +153,11 @@ class PrivacyEngine:
         import os
 
         from repro.tuner import max_batch as _mb
-        from repro.tuner.measure import MeasureConfig, build_plan
+        from repro.tuner.measure import (
+            MeasureConfig,
+            build_plan,
+            close_physical_batch_loop,
+        )
         from repro.tuner.plan import ClipPlan, default_plan_path, load_cached_plan
 
         budget = _mb.DEFAULT_BUDGET_BYTES if budget_bytes is None else budget_bytes
@@ -128,7 +180,8 @@ class PrivacyEngine:
             if cached is not None and budget_ok and cached.matches(meta):
                 self.use_plan(cached)
                 return cached
-        plan = build_plan(meta, measure=measure or MeasureConfig(), arch=arch)
+        measure_cfg = measure or MeasureConfig()
+        plan = build_plan(meta, measure=measure_cfg, arch=arch)
         if search_max_batch:
             grad_fn = dp_value_and_clipped_grad(
                 self.loss_with_ctx, dataclasses.replace(self._clip_cfg, plan=plan)
@@ -145,6 +198,26 @@ class PrivacyEngine:
                     accumulation_steps=steps,
                     budget_bytes=budget,
                 )
+                if remeasure_at_physical:
+                    # close the loop: the step will run at the tuned batch,
+                    # so the branch decision must be measured there too —
+                    # and flips change per-tap clipping memory, so the batch
+                    # certificate and the branch maps must converge together
+                    def _search(p):
+                        grad_fn = dp_value_and_clipped_grad(
+                            self.loss_with_ctx,
+                            dataclasses.replace(self._clip_cfg, plan=p),
+                        )
+                        return _mb.max_batch_by_memory(
+                            grad_fn, params, batch, budget_bytes=budget,
+                            hi_cap=hi_cap,
+                            reserved_bytes=_mb.resident_state_bytes(params),
+                        )
+
+                    plan = close_physical_batch_loop(
+                        plan, meta, _search, self.batch_size, budget,
+                        measure_cfg,
+                    )
         if plan_path is not None:
             path = (
                 default_plan_path(arch, plan.fingerprint)

@@ -1,10 +1,25 @@
-"""Per-tap per-sample gradient norms and (BK mode) weighted gradients.
+"""Per-tap per-sample gradient norms, book-keeping banks, weighted gradients.
 
 Given a tap's recorded activation ``a``, its cotangent ``g = dL/ds`` from the
 first backward pass, and the static ``TapMeta``, this module computes the
 per-sample squared gradient norm on the branch the layerwise decision picked
 (Alg. 1), and — for the book-keeping mode — the weighted gradient
 ``sum_i C_i g_i`` directly as an einsum, skipping the second backward pass.
+
+Three call sites:
+- ``tap_norm_sq``        per-sample norm^2 from explicit (a, g) pairs; used
+                         by the reference ``*_taps`` engine and the fused
+                         probes of the second-backward modes.
+- ``tap_bank``           runs INSIDE the fused probe's backward rule: returns
+                         the side-channel payload for one tap — always the
+                         per-sample norm^2 ``n``, plus (book-keeping mode) the
+                         residuals the weighted-grad stage needs (banked
+                         per-sample gradients ``psg``/``psg_b``, or the
+                         ``(a, g)`` book for ghost-banked taps).
+- ``bank_weighted_grads``  the fused gradient stage: ``sum_i C_i g_i`` from a
+                         tap's bank once the clip factors are known.
+- ``tap_weighted_grads``   same, from explicit (a, g) (reference engine and
+                         late taps whose activation only exists post-scan).
 
 Canonical layouts (stack dims folded into the row dim N):
 - matmul:     a (N, T, D), g (N, T, p); N = prod(stack) * B * G
@@ -64,11 +79,14 @@ def tap_norm_sq(
     ghost_block: int = 512,
     inst_block_d: int = 8192,
     override: Optional[str] = None,
+    include_bias: bool = True,
 ) -> jax.Array:
     """Per-sample squared norm contributions: (B,) fp32 (weight + bias).
 
     ``override`` forces the matmul branch (tuner ClipPlan); both branches
     compute the same norm, so it changes cost only, never the result.
+    ``include_bias=False`` skips the bias term (book-keeping banks it
+    separately as ``psg_b`` and adds its norm from the bank).
     """
     g = g.astype(jnp.float32)
     total = jnp.zeros((meta.batch_size,), jnp.float32)
@@ -111,12 +129,195 @@ def tap_norm_sq(
     else:
         raise ValueError(f"unknown tap kind {meta.kind!r}")
 
-    if meta.bias_path is not None:
+    if meta.bias_path is not None and include_bias:
         lead = math.prod(meta.stack_dims) if meta.stack_dims else 1
         gf = g.reshape(lead, meta.batch_size, -1, meta.p)  # (L, B, G*T, p)
         bias_grad = jnp.sum(gf, axis=2)  # (L, B, p)
         total = total + jnp.sum(bias_grad * bias_grad, axis=(0, 2))
     return total
+
+
+def psg_param_shape(meta: TapMeta) -> tuple[int, ...]:
+    """Per-layer shape of one sample's banked gradient = the param's layout.
+
+    matmul (D, p) / grouped (G, D, p) / conv kernel+(d, p) | scale (p,) |
+    scale_grouped (h,) | dw_conv (k, d) | bias (p,).
+    """
+    if meta.kind == "matmul":
+        if meta.conv is not None:
+            d_in = meta.D // math.prod(meta.conv.kernel)
+            return tuple(meta.conv.kernel) + (d_in, meta.p)
+        if meta.n_groups > 1:
+            return (meta.n_groups, meta.D, meta.p)
+        return (meta.D, meta.p)
+    if meta.kind == "dw_conv":
+        return (meta.D, meta.p)
+    if meta.kind in ("scale", "scale_grouped", "bias"):
+        return (meta.p,)
+    raise ValueError(f"no banked per-sample gradient for tap kind {meta.kind!r}")
+
+
+def _matmul_psg(meta: TapMeta, a: jax.Array, g: jax.Array) -> jax.Array:
+    """Per-layer per-sample weight gradients (B,) + psg_param_shape(meta).
+
+    Convolutions go through a vmapped vjp of the conv op itself — the
+    per-sample dW lowers to a conv kernel and the (B, T, D) im2col patches
+    are never materialized (the explicit unfold is the single largest temp
+    of the instantiate branch on CNNs).
+    """
+    b = meta.batch_size
+    g32 = g.astype(jnp.float32)
+    if meta.conv is not None:
+        info = meta.conv
+        a4 = a.reshape((b,) + tuple(a.shape[-3:])).astype(jnp.float32)
+        go = g32.reshape((b,) + tuple(meta.s_shape[-3:]))
+        w0 = jnp.zeros(psg_param_shape(meta), jnp.float32)
+
+        def one(ab, gb):
+            _, pullb = jax.vjp(
+                lambda w: jax.lax.conv_general_dilated(
+                    ab[None], w, info.strides, info.padding,
+                    rhs_dilation=info.rhs_dilation,
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                    feature_group_count=info.feature_group_count,
+                ),
+                w0,
+            )
+            (dw,) = pullb(gb[None])
+            return dw
+
+        return jax.vmap(one)(a4, go)
+    gdim = max(meta.n_groups, 1)
+    aa = a.astype(jnp.float32).reshape(b * gdim, meta.T, meta.D)
+    gg = g32.reshape(b * gdim, meta.T, meta.p)
+    psg = jnp.einsum("ntd,ntp->ndp", aa, gg)
+    return psg.reshape((b,) + psg_param_shape(meta))
+
+
+def _small_psg(meta: TapMeta, a: jax.Array, g: jax.Array) -> jax.Array:
+    """Per-layer per-sample gradients for the tiny forced-instantiate kinds.
+
+    Shapes (B = batch, per layer instance, no stack dims):
+    scale (B, p) | scale_grouped (B, h) | dw_conv (B, k, d) | bias (B, p).
+    """
+    b = meta.batch_size
+    if meta.kind == "scale":
+        af = a.astype(jnp.float32).reshape(b, meta.T, meta.p)
+        gf = g.reshape(b, meta.T, meta.p)
+        return jnp.sum(gf * af, axis=1)
+    if meta.kind == "scale_grouped":
+        h, dh = meta.p, meta.D
+        af = a.astype(jnp.float32).reshape(b, meta.T, h, dh)
+        gf = g.reshape(b, meta.T, h, dh)
+        return jnp.einsum("bthd,bthd->bh", gf, af)
+    if meta.kind == "dw_conv":
+        k = meta.D
+        af = a.astype(jnp.float32).reshape(b, meta.T, k, meta.p)
+        gf = g.reshape(b, meta.T, meta.p)
+        return jnp.einsum("btkd,btd->bkd", af, gf)
+    if meta.kind == "bias":
+        return jnp.sum(g.reshape(b, meta.T, meta.p), axis=1)
+    raise ValueError(f"no small per-sample gradient for tap kind {meta.kind!r}")
+
+
+def tap_bank(
+    meta: TapMeta,
+    a: Optional[jax.Array],
+    g: jax.Array,
+    *,
+    mode: str = "mixed_ghost",
+    decision_by: str = "space",
+    ghost_block: int = 512,
+    inst_block_d: int = 8192,
+    override: Optional[str] = None,
+) -> dict[str, jax.Array]:
+    """The fused probe's backward payload for one tap (per layer instance).
+
+    Every bank carries ``n`` — the tap's total per-sample squared norm (B,).
+    Outside book-keeping mode that is the whole bank (today's side channel).
+    In ``bk_mixed`` the bank additionally carries what the weighted-grad
+    stage needs once the clip factors exist:
+
+    - forced-instantiate kinds and instantiate-branch matmuls: the per-sample
+      gradients ``psg`` (+ ``psg_b`` for the bias) — the norm falls out of
+      them for free, and nothing activation- or cotangent-sized survives;
+    - ghost-branch matmuls and embeddings: the ``(a, g)`` book (smaller than
+      pD per sample exactly when the branch rule banked it), from which both
+      the ghost norm (here) and the weighted einsum (later) are formed.
+    """
+    if mode != "bk_mixed":
+        return {
+            "n": tap_norm_sq(
+                meta, a, g, mode=mode, decision_by=decision_by,
+                ghost_block=ghost_block, inst_block_d=inst_block_d,
+                override=override,
+            )
+        }
+
+    b = meta.batch_size
+    g32 = g.astype(jnp.float32)
+    bank: dict[str, jax.Array] = {}
+    n = jnp.zeros((b,), jnp.float32)
+
+    if meta.kind == "matmul":
+        branch = decide(meta, mode="bk_mixed", by=decision_by, override=override)
+        if branch == "instantiate":
+            psg = _matmul_psg(meta, a, g32)
+            bank["psg"] = psg
+            n = n + jnp.sum(jnp.square(psg).reshape(b, -1), axis=-1)
+        else:
+            bank["a"], bank["g"] = a, g
+            n = n + tap_norm_sq(
+                meta, a, g, mode="ghost", decision_by=decision_by,
+                ghost_block=ghost_block, inst_block_d=inst_block_d,
+                include_bias=False,
+            )
+    elif meta.kind == "embedding":
+        # a is the fp32-cast ids (taps.Ctx casts before probing): exact for
+        # vocab indices below 2^24, and the only way integers survive the
+        # cotangent side channel
+        bank["a"], bank["g"] = a, g
+        n = n + tap_norm_sq(
+            meta, a, g, mode=mode, decision_by=decision_by,
+            ghost_block=ghost_block, inst_block_d=inst_block_d,
+            include_bias=False,
+        )
+    else:
+        psg = _small_psg(meta, a, g32)
+        bank["psg"] = psg
+        n = n + jnp.sum(jnp.square(psg).reshape(b, -1), axis=-1)
+
+    if meta.bias_path is not None:
+        if "g" in bank:
+            # the book already reconstructs the bias grad; only the norm term
+            # is still owed (tap_norm_sq above ran with include_bias=False)
+            gf = g32.reshape(b, -1, meta.p)
+            bias_grad = jnp.sum(gf, axis=1)
+            n = n + jnp.sum(bias_grad * bias_grad, axis=-1)
+        else:
+            psg_b = jnp.sum(g32.reshape(b, -1, meta.p), axis=1)
+            bank["psg_b"] = psg_b
+            n = n + jnp.sum(psg_b * psg_b, axis=-1)
+    bank["n"] = n
+    return bank
+
+
+def _finish_matmul_grad(
+    meta: TapMeta, w: jax.Array, param_shape: tuple[int, ...]
+) -> jax.Array:
+    """Weighted matmul grad (L, G, D, p) -> the parameter's own layout.
+
+    Convolution weights live as (kh, kw, d, p) while the unfolded fan-in is
+    channel-major (D = d*kh*kw), so the conv path un-permutes before the
+    final reshape.
+    """
+    lead = math.prod(meta.stack_dims) if meta.stack_dims else 1
+    if meta.conv is not None:
+        # unfold ordering is channel-major: (D=d*kh*kw, p) -> (d, kh, kw, p)
+        kh, kw = meta.conv.kernel
+        d_in = meta.D // (kh * kw)
+        w = w.reshape(lead, d_in, kh, kw, meta.p).transpose(0, 2, 3, 1, 4)
+    return w.reshape(param_shape)
 
 
 def tap_weighted_grads(
@@ -150,15 +351,7 @@ def tap_weighted_grads(
         else:
             aa = a.reshape(lead, meta.batch_size, gdim, meta.T, meta.D)
         w = jnp.einsum("lbgtd,lbgtp->lgdp", aa.astype(jnp.float32), gw)
-        if meta.conv is not None:
-            # unfold ordering is channel-major: (D=d*kh*kw, p) -> (d, kh, kw, p)
-            kh, kw = meta.conv.kernel
-            d_in = meta.D // (kh * kw)
-            w = w.reshape(lead, d_in, kh, kw, meta.p).transpose(0, 2, 3, 1, 4)
-            w = w.reshape(param_shape)
-        else:
-            w = w.reshape(param_shape)
-        out[meta.param_path] = w
+        out[meta.param_path] = _finish_matmul_grad(meta, w, param_shape)
     elif meta.kind == "embedding":
         ids = a.reshape(-1)
         flat_g = gw.reshape(-1, meta.p)
@@ -188,6 +381,44 @@ def tap_weighted_grads(
         gb = g.astype(jnp.float32).reshape(lead, meta.batch_size, -1, meta.p)
         gb = gb * cw[None, :, None, None]
         out[meta.bias_path] = jnp.einsum("lbtp->lp", gb).reshape(
+            meta.stack_dims + (meta.p,) if meta.stack_dims else (meta.p,)
+        )
+    return out
+
+
+def bank_weighted_grads(
+    meta: TapMeta,
+    bank: dict[str, jax.Array],
+    clip: jax.Array,  # (B,) clip factors C_i
+    param_shape: tuple[int, ...],
+) -> dict[str, jax.Array]:
+    """Fused book-keeping gradient stage: sum_i C_i g_i from a probe bank.
+
+    ``bank`` arrives with stack dims prepended by the scan (the probes emit
+    per-layer payloads; ``lax.scan`` stacks them).  Ghost-banked taps replay
+    the explicit weighted einsum from the banked (a, g) book; psg-banked taps
+    contract the banked per-sample gradients with the clip factors directly.
+    """
+    if "g" in bank:
+        a = bank["a"]
+        if meta.kind == "embedding":
+            # ids crossed the side channel as fp32 (see tap_bank)
+            a = jnp.round(a).astype(jnp.int32)
+        return tap_weighted_grads(meta, a, bank["g"], clip, param_shape)
+
+    out: dict[str, jax.Array] = {}
+    lead = math.prod(meta.stack_dims) if meta.stack_dims else 1
+    b = meta.batch_size
+    cw = clip.astype(jnp.float32)
+    # banked per-sample grads are already in the param's own layout:
+    # (L..., B, *param) -> contract the batch dim against the clip factors
+    psg = bank["psg"].reshape((lead, b) + psg_param_shape(meta))
+    w = jnp.einsum("lb...,b->l...", psg, cw)
+    out[meta.param_path] = w.reshape(param_shape)
+
+    if "psg_b" in bank:
+        psg_b = bank["psg_b"].reshape(lead, b, meta.p)
+        out[meta.bias_path] = jnp.einsum("lbp,b->lp", psg_b, cw).reshape(
             meta.stack_dims + (meta.p,) if meta.stack_dims else (meta.p,)
         )
     return out

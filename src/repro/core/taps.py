@@ -72,15 +72,21 @@ class TapMeta:
     stack_dims: tuple[int, ...] = ()  # leading dims added by ScannedStack
     conv: Optional[ConvInfo] = None
     batch_size: int = 0
-    # fused taps compute their norm inside the backward pass (core/fused.py)
-    # and expose it as the cotangent of a (B,)-sized dummy input
+    # fused taps compute their norm (and, in book-keeping mode, the residuals
+    # the weighted-grad einsum needs) inside the backward pass (core/fused.py)
+    # and expose them as the cotangents of a dummy "bank" input
     fused: bool = False
+    # shape/dtype of the recorded activation as the probe receives it
+    # (embedding ids are fp32-cast before probing); None for late taps
+    a_shape: Optional[tuple[int, ...]] = None
+    a_dtype: Any = None
 
     def with_stack(self, n: int) -> "TapMeta":
         return dataclasses.replace(
             self,
             stack_dims=(n,) + self.stack_dims,
             s_shape=(n,) + tuple(self.s_shape),
+            a_shape=(n,) + tuple(self.a_shape) if self.a_shape is not None else None,
         )
 
     @property
@@ -115,11 +121,13 @@ class Ctx:
 
     Two engines:
     - fused (``clip`` set): each tap routes through a custom-vjp probe whose
-      dummy-(B,) input's cotangent IS the per-sample norm^2 (core/fused.py).
-      Nothing tap-sized ever escapes the backward pass.
+      dummy *bank* input's cotangent carries the per-sample norm^2 — and, in
+      book-keeping mode, the weighted-gradient residuals (core/fused.py).
+      Nothing tap-sized ever escapes the backward pass except what the
+      algorithm itself must bank.
     - explicit (``clip`` None): pre-activations get zero taps added and
-      activations recorded; dL/ds comes back as tap cotangents (bk_mixed and
-      reference/testing paths).
+      activations recorded; dL/ds comes back as tap cotangents (the
+      ``*_taps`` reference/testing engines and late taps).
 
     ``taps=None``/``zs=None`` means discovery mode (meta only).
     ``collect=False`` disables DP bookkeeping entirely (serving path).
@@ -193,6 +201,9 @@ class Ctx:
             conv=conv,
             batch_size=int(s.shape[0]),
             fused=fused,
+            a_shape=tuple(int(d) for d in a.shape) if a is not None else None,
+            a_dtype=(jnp.float32 if kind == "embedding" else a.dtype)
+            if a is not None else None,
         )
         self.meta[full] = meta
         if fused:

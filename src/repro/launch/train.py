@@ -11,10 +11,13 @@ CPU quickstart (reduced config):
     python -m repro.launch.train --arch qwen2-72b --reduced --steps 20 \
         --batch 4 --seq 64 --ckpt-dir /tmp/ckpt
 
-Measured-cost autotuning (repro.tuner): ``--tune`` profiles ghost vs
-instantiate per tap on this device and binary-searches the max physical
-microbatch; ``--plan plan.json`` reuses a cached ClipPlan.  When the tuned
-physical batch is smaller than ``--batch`` (the logical batch), the loop
+Measured-cost autotuning (repro.tuner): ``--tune`` profiles the three-way
+branch decision per tap on this device — ghost / instantiate norms for the
+second-backward modes and the book-keeping banks for ``bk_mixed`` — and
+binary-searches the max physical microbatch; ``--plan plan.json`` reuses a
+cached ClipPlan.  ``--mode auto`` adopts the plan's measured
+``recommended_mode`` (mixed_ghost vs bk_mixed).  When the tuned physical
+batch is smaller than ``--batch`` (the logical batch), the loop
 automatically switches to gradient accumulation with the derived number of
 microsteps (the paper's virtual-step pattern).
 """
@@ -59,7 +62,9 @@ def parse_args(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--mode", default="mixed_ghost")
+    ap.add_argument("--mode", default="mixed_ghost",
+                    help="clipping mode (see core.clipping.MODES), or 'auto' "
+                         "to adopt the tuned plan's recommended_mode")
     ap.add_argument("--clip-norm", type=float, default=1.0)
     ap.add_argument("--target-epsilon", type=float, default=None)
     ap.add_argument("--noise-multiplier", type=float, default=1.0)
@@ -93,7 +98,7 @@ def run_once(args) -> int:
     mesh = make_host_mesh()
 
     # privacy engine: sigma from target epsilon (or given), accountant attached
-    def make_engine(batch_size: int) -> PrivacyEngine:
+    def make_engine(batch_size: int, mode: str) -> PrivacyEngine:
         return PrivacyEngine(
             loss_with_ctx=model.loss_with_ctx,
             batch_size=batch_size,
@@ -102,10 +107,13 @@ def run_once(args) -> int:
             max_grad_norm=args.clip_norm,
             target_epsilon=args.target_epsilon,
             noise_multiplier=None if args.target_epsilon else args.noise_multiplier,
-            mode=args.mode,
+            mode=mode,
         )
 
-    engine = make_engine(args.batch)
+    # '--mode auto' is resolved from the tuned plan below; tune/search under
+    # the paper default in the meantime
+    clip_mode = "mixed_ghost" if args.mode == "auto" else args.mode
+    engine = make_engine(args.batch, clip_mode)
     log.info("noise multiplier sigma=%.4f (q=%.5f)", engine.noise_multiplier,
              engine.sampling_rate)
 
@@ -121,16 +129,22 @@ def run_once(args) -> int:
         from repro.core.clipping import discover_meta
         from repro.tuner import ClipPlan
 
-        plan = ClipPlan.load(args.plan)
         probe = synthetic_arch_batch(cfg, batch=args.batch, seq=seq)
+        try:
+            plan = ClipPlan.load(args.plan)
+        except (ValueError, KeyError) as e:
+            # e.g. a pre-three-way (v1) artifact: unreadable == stale
+            log.warning("unreadable ClipPlan %s (%s); falling back to the "
+                        "analytic decision", args.plan, e)
+            plan = None
         metas = discover_meta(model.loss_with_ctx, state["params"], probe)
-        if not plan.matches(metas):
+        if plan is not None and not plan.matches(metas):
             # a stale plan must not drive anything — neither the branch
             # overrides nor the microbatch geometry it measured elsewhere
             log.warning("ClipPlan %s is stale for this arch/device; falling "
                         "back to the analytic decision", args.plan)
             plan = None
-        else:
+        if plan is not None:
             engine.use_plan(plan)
             log.info("loaded ClipPlan %s (device %s, %d branch overrides)",
                      args.plan, plan.device, len(plan.branches))
@@ -144,6 +158,41 @@ def run_once(args) -> int:
         )
         log.info("tuned %d taps; max physical batch=%s", len(plan.branches),
                  plan.physical_batch)
+
+    if args.mode == "auto":
+        if plan is not None:
+            clip_mode = plan.recommended_mode()
+            log.info("--mode auto: measured recommendation is %s "
+                     "(mixed_ghost=%.1fus bk_mixed=%.1fus per step)",
+                     clip_mode, plan.mode_cost_us("mixed_ghost"),
+                     plan.mode_cost_us("bk_mixed"))
+        else:
+            log.warning("--mode auto without a usable plan; staying on %s "
+                        "(pass --tune or a valid --plan)", clip_mode)
+        if clip_mode != engine.mode:
+            # the max-batch certificate was compiled under the tuning mode;
+            # book-keeping banks residuals the searched graph never
+            # allocated, so re-certify under the adopted mode before
+            # committing to it
+            candidate = make_engine(args.batch, clip_mode)
+            if plan is not None:
+                candidate.use_plan(plan)
+                if plan.physical_batch and plan.budget_bytes:
+                    replan = candidate.recertify_max_batch(
+                        state["params"], probe, hi_cap=args.tune_hi_cap
+                    )
+                    if replan is None:
+                        log.warning(
+                            "no batch fits the budget under %s; staying on "
+                            "the certified tuning mode %s", clip_mode,
+                            engine.mode,
+                        )
+                        clip_mode = engine.mode
+                        candidate = None
+                    else:
+                        plan = replan
+            if candidate is not None:
+                engine = candidate
 
     physical, accum = args.batch, 1
     if plan is not None and plan.physical_batch:
@@ -163,12 +212,12 @@ def run_once(args) -> int:
         # derived from a target epsilon) match what actually runs
         log.info("effective logical batch %d != requested %d; re-deriving "
                  "privacy accounting", logical_eff, args.batch)
-        engine = make_engine(logical_eff)
+        engine = make_engine(logical_eff, clip_mode)
         if plan is not None:
             engine.use_plan(plan)
 
     dp = DPTrainConfig(
-        clipping_mode=args.mode,
+        clipping_mode=clip_mode,
         clip_norm=args.clip_norm,
         noise_multiplier=engine.noise_multiplier,
         logical_batch=logical_eff,

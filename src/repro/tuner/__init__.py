@@ -11,7 +11,14 @@ from repro.tuner.max_batch import (
     find_max_physical_batch,
     max_batch_by_memory,
 )
-from repro.tuner.measure import MeasureConfig, build_plan, measure_branches, measure_tap
+from repro.tuner.measure import (
+    MeasureConfig,
+    build_plan,
+    close_physical_batch_loop,
+    measure_branches,
+    measure_tap,
+    remeasure_at_batch,
+)
 from repro.tuner.plan import (
     ClipPlan,
     TapTiming,
@@ -26,8 +33,10 @@ __all__ = [
     "TapTiming",
     "MeasureConfig",
     "build_plan",
+    "close_physical_batch_loop",
     "measure_branches",
     "measure_tap",
+    "remeasure_at_batch",
     "derive_accumulation",
     "find_max_physical_batch",
     "max_batch_by_memory",

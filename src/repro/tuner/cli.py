@@ -2,11 +2,15 @@
 
     PYTHONPATH=src python -m repro.tuner --arch xlstm-350m --reduced
 
-Steps: build the arch (registry), discover its taps, time ghost vs
-instantiate per matmul tap on this device, binary-search the max physical
-microbatch under the memory budget, and write the plan JSON (cache path or
---plan).  The printed table shows where the measured winner disagrees with
-the analytic Eq-(4.1) rule — the entire reason this subsystem exists.
+Steps: build the arch (registry), discover its taps, time the three-way
+branch decision per matmul tap on this device — {ghost norm, instantiated
+norm} for the second-backward modes and {ghost-bank, psg-bank} for
+book-keeping, plus each tap's share of the second backward — binary-search
+the max physical microbatch under the memory budget, re-measure at the tuned
+physical batch, and write the plan JSON (cache path or --plan).  The printed
+table shows where the measured winner disagrees with the analytic Eq-(4.1)
+rule — the entire reason this subsystem exists — and which tuned mode
+(mixed_ghost vs bk_mixed) the measurements recommend.
 """
 from __future__ import annotations
 
@@ -20,7 +24,11 @@ from repro.core.clipping import ClipConfig, discover_meta, dp_value_and_clipped_
 from repro.core.decision import decide
 from repro.data.synthetic import synthetic_arch_batch
 from repro.tuner import max_batch as mb
-from repro.tuner.measure import MeasureConfig, build_plan
+from repro.tuner.measure import (
+    MeasureConfig,
+    build_plan,
+    close_physical_batch_loop,
+)
 from repro.tuner.plan import default_plan_path
 from repro.utils.logging import get_logger
 
@@ -47,6 +55,8 @@ def parse_args(argv=None):
                     help="memory budget for the max-batch search")
     ap.add_argument("--hi-cap", type=int, default=4096)
     ap.add_argument("--skip-max-batch", action="store_true")
+    ap.add_argument("--skip-remeasure", action="store_true",
+                    help="do not re-time branches at the tuned physical batch")
     ap.add_argument("--mode", default="mixed_ghost",
                     help="clipping mode the max-batch search compiles")
     return ap.parse_args(argv)
@@ -96,30 +106,56 @@ def main(argv=None) -> int:
             log.info("max physical batch %d under %.1fGB; logical %d -> "
                      "%d x %d microsteps", max_physical, args.budget_gb,
                      logical, physical, steps)
+            if not args.skip_remeasure:
+                # the step runs at the tuned batch: measure the decision
+                # there, re-certifying the batch if any branch flips
+                def _search(p):
+                    fn = dp_value_and_clipped_grad(
+                        model.loss_with_ctx, ClipConfig(mode=args.mode, plan=p)
+                    )
+                    return mb.max_batch_by_memory(
+                        fn, params, batch, budget_bytes=budget,
+                        hi_cap=args.hi_cap,
+                        reserved_bytes=mb.resident_state_bytes(params),
+                    )
+
+                plan = close_physical_batch_loop(
+                    plan, metas, _search, logical, budget, measure
+                )
 
     path = args.plan or default_plan_path(cfg.name, plan.fingerprint)
     plan.save(path)
 
     branch_map = plan.branch_map()
-    timing = {name: (g, i) for name, g, i in plan.timings}
+    bk_map = plan.branch_map("bk_mixed")
+    timing = plan.tap_timings()
     print(f"\nClipPlan for {cfg.name} on {plan.device}  ->  {path}")
-    print(f"{'tap':<44s} {'T':>5s} {'D':>6s} {'p':>6s} "
-          f"{'ghost_us':>9s} {'inst_us':>9s} {'analytic':>11s} {'measured':>11s}")
+    print(f"{'tap':<40s} {'T':>5s} {'D':>6s} {'p':>6s} "
+          f"{'ghost_us':>9s} {'inst_us':>9s} {'bk_g_us':>9s} {'bk_i_us':>9s} "
+          f"{'2bwd_us':>8s} {'analytic':>11s} {'measured':>11s} {'bk':>11s}")
     flips = 0
     for name in sorted(branch_map):
         m = metas[name]
         analytic = decide(m, mode="mixed_ghost")
         measured = branch_map[name]
-        g_us, i_us = timing[name]
+        t = timing[name]
         flag = "  <- flip" if analytic != measured else ""
         flips += analytic != measured
-        print(f"{name:<44s} {m.T:>5d} {m.D:>6d} {m.p:>6d} "
-              f"{g_us:>9.1f} {i_us:>9.1f} {analytic:>11s} {measured:>11s}{flag}")
+        print(f"{name:<40s} {m.T:>5d} {m.D:>6d} {m.p:>6d} "
+              f"{t.ghost_us:>9.1f} {t.instantiate_us:>9.1f} "
+              f"{t.bk_ghost_us:>9.1f} {t.bk_instantiate_us:>9.1f} "
+              f"{t.second_bwd_us:>8.1f} {analytic:>11s} {measured:>11s} "
+              f"{bk_map.get(name, '-'):>11s}{flag}")
     print(f"\n{flips}/{len(branch_map)} taps flip vs the analytic rule")
+    print(f"measured per-step clipping cost: mixed_ghost="
+          f"{plan.mode_cost_us('mixed_ghost'):.1f}us  "
+          f"bk_mixed={plan.mode_cost_us('bk_mixed'):.1f}us  "
+          f"-> recommended mode: {plan.recommended_mode()}")
     if plan.physical_batch:
+        at = " (branches re-measured there)" if plan.measured_at_physical else ""
         print(f"max physical batch: {plan.physical_batch} "
               f"(logical {plan.logical_batch} = "
-              f"{plan.accumulation_steps} microsteps)")
+              f"{plan.accumulation_steps} microsteps){at}")
     return 0
 
 

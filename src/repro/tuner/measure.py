@@ -1,12 +1,27 @@
-"""Measured per-tap branch costs: ghost norm vs gradient instantiation.
+"""Measured per-tap branch costs: the three-way clipping decision.
 
 The analytic decision (Eq 4.1) counts multiplies; this module instead times
-both branch kernels on the actual device over the tap's real canonical
+the branch kernels on the actual device over the tap's real canonical
 shapes — a (N, T, D) activation against a (N, T, p) cotangent, exactly what
 ``ghost.tap_norm_sq`` feeds them at train time — with warmup and
-median-of-k.  Convolution taps are timed post-unfold: both branches consume
-the unfolded activation, so the (shared) im2col cost cancels out of the
-comparison.
+median-of-k.  Convolution taps are timed post-unfold: both norm branches
+consume the unfolded activation, so the (shared) im2col cost cancels out of
+the comparison.
+
+Five timings per matmul tap:
+
+- ``ghost_us`` / ``instantiate_us``: the norm kernels (second-backward
+  modes pick the cheaper and then pay ``second_bwd_us`` on top);
+- ``bk_ghost_us`` / ``bk_instantiate_us``: the full book-keeping pipelines —
+  ghost norm + weighted einsum from the (a, g) book, vs per-sample-gradient
+  bank (norm falls out free) + clip contraction;
+- ``second_bwd_us``: the tap's dW + dX matmuls — its share of the second
+  backward pass that book-keeping skips.
+
+This is what makes the tuner *plan-aware across modes*: per tap it can
+answer {ghost+2nd-bwd, instantiate+2nd-bwd, book-keeping-einsum} and emit a
+branch map per mode (plan.branches / plan.bk_branches) plus a measured
+``recommended_mode``.
 
 Only matmul taps are measured.  Embedding / scale / bias / dw_conv taps have
 a single viable branch (decision.decide's forced cases) and are never
@@ -71,26 +86,101 @@ def _tap_rows(meta: TapMeta, max_rows: Optional[int]) -> int:
 
 
 def measure_tap(meta: TapMeta, cfg: MeasureConfig = MeasureConfig()) -> Optional[TapTiming]:
-    """Time both branches for one matmul tap; None for forced-branch kinds."""
+    """Time every branch for one matmul tap; None for forced-branch kinds."""
     if meta.kind != "matmul":
         return None
     n = _tap_rows(meta, cfg.max_rows)
     key = jax.random.PRNGKey(cfg.seed)
-    ka, kg = jax.random.split(key)
+    ka, kg, kw, kc = jax.random.split(key, 4)
     dtype = jnp.dtype(meta.s_dtype)
     # match the train-time kernels exactly: activations stay in their
     # storage dtype, but tap_norm_sq upcasts the cotangent to fp32 before
     # either branch runs (core/ghost.py) — time what will actually execute
     a = jax.random.normal(ka, (n, meta.T, meta.D), jnp.float32).astype(dtype)
     g = jax.random.normal(kg, (n, meta.T, meta.p), jnp.float32)
+    w = jax.random.normal(kw, (meta.D, meta.p), jnp.float32)
+    c = jax.random.uniform(kc, (n,), jnp.float32)
 
+    # -- second-backward norm branches (both consume unfolded patches at
+    # train time, so the shared im2col cost cancels out of THIS comparison)
     ghost_fn = jax.jit(lambda x, y: gops.ghost_norm_sq(x, y, block=cfg.ghost_block))
     inst_fn = jax.jit(
         lambda x, y: gops.instantiated_norm_sq(x, y, block_d=cfg.inst_block_d)
     )
     ghost_us = time_us(ghost_fn, a, g, repeats=cfg.repeats, warmup=cfg.warmup)
     inst_us = time_us(inst_fn, a, g, repeats=cfg.repeats, warmup=cfg.warmup)
-    return TapTiming(ghost_us=ghost_us, instantiate_us=inst_us)
+
+    # -- book-keeping pipelines (norm + bank + weighted contraction) ------
+    # These time the kernels dp_value_and_clipped_grad actually runs, which
+    # for convolutions are NOT the im2col einsums: the psg bank goes through
+    # the conv op's own vjp on the raw activation (ghost._matmul_psg, no
+    # unfold), while the ghost book pays the unfold itself.
+    is_conv = meta.conv is not None and meta.a_shape is not None
+    if is_conv:
+        import dataclasses as _dc
+
+        from repro.core.ghost import _matmul_psg
+        from repro.nn.conv import unfold2d
+
+        m1 = _dc.replace(
+            meta, batch_size=n, stack_dims=(),
+            s_shape=(n,) + tuple(meta.s_shape[-3:]),
+            a_shape=(n,) + tuple(meta.a_shape[-3:]),
+        )
+        a_raw = jax.random.normal(
+            ka, (n,) + tuple(meta.a_shape[-3:]), jnp.float32
+        ).astype(meta.a_dtype or dtype)
+        g_out = g.reshape((n,) + tuple(meta.s_shape[-3:]))
+
+        def bk_ghost(xraw, y, cc):
+            aa = unfold2d(xraw, meta.conv).astype(jnp.float32)
+            yy = y.reshape(n, meta.T, meta.p)
+            norms = gops.ghost_norm_sq(aa, yy, block=cfg.ghost_block)
+            wg = jnp.einsum("ntd,ntp->dp", aa, yy * cc[:, None, None])
+            return norms, wg
+
+        def bk_inst(xraw, y, cc):
+            psg = _matmul_psg(m1, xraw, y)
+            norms = jnp.sum(jnp.square(psg).reshape(n, -1), axis=-1)
+            wg = jnp.einsum("n...,n->...", psg, cc)
+            return norms, wg
+
+        bk_ghost_us = time_us(jax.jit(bk_ghost), a_raw, g_out, c,
+                              repeats=cfg.repeats, warmup=cfg.warmup)
+        bk_inst_us = time_us(jax.jit(bk_inst), a_raw, g_out, c,
+                             repeats=cfg.repeats, warmup=cfg.warmup)
+    else:
+        def bk_ghost(x, y, cc):
+            norms = gops.ghost_norm_sq(x, y, block=cfg.ghost_block)
+            xf = x.astype(jnp.float32)
+            wg = jnp.einsum("ntd,ntp->dp", xf, y * cc[:, None, None])
+            return norms, wg
+
+        def bk_inst(x, y, cc):
+            psg = jnp.einsum("ntd,ntp->ndp", x.astype(jnp.float32), y)
+            norms = jnp.sum(jnp.square(psg).reshape(psg.shape[0], -1), axis=-1)
+            wg = jnp.einsum("ndp,n->dp", psg, cc)
+            return norms, wg
+
+        bk_ghost_us = time_us(jax.jit(bk_ghost), a, g, c,
+                              repeats=cfg.repeats, warmup=cfg.warmup)
+        bk_inst_us = time_us(jax.jit(bk_inst), a, g, c,
+                             repeats=cfg.repeats, warmup=cfg.warmup)
+
+    # -- the tap's share of a second backward pass (dW + dX) --------------
+    def second_bwd(x, y, ww):
+        dw = jnp.einsum("ntd,ntp->dp", x.astype(jnp.float32), y)
+        dx = jnp.einsum("ntp,dp->ntd", y, ww)
+        return dw, dx
+
+    second_bwd_us = time_us(jax.jit(second_bwd), a, g, w,
+                            repeats=cfg.repeats, warmup=cfg.warmup)
+
+    return TapTiming(
+        ghost_us=ghost_us, instantiate_us=inst_us,
+        bk_ghost_us=bk_ghost_us, bk_instantiate_us=bk_inst_us,
+        second_bwd_us=second_bwd_us,
+    )
 
 
 def _shape_key(name: str, meta: TapMeta) -> tuple:
@@ -123,11 +213,24 @@ def measure_branches(
             analytic = decide(meta, mode="mixed_ghost")
             mark = "" if analytic == timing.winner else "  (!= analytic %s)" % analytic
             log.info(
-                "%s: ghost=%.1fus inst=%.1fus -> %s%s",
-                name, timing.ghost_us, timing.instantiate_us, timing.winner, mark,
+                "%s: ghost=%.1fus inst=%.1fus bk_ghost=%.1fus bk_inst=%.1fus "
+                "2nd_bwd=%.1fus -> %s/%s%s",
+                name, timing.ghost_us, timing.instantiate_us,
+                timing.bk_ghost_us, timing.bk_instantiate_us,
+                timing.second_bwd_us, timing.winner, timing.bk_winner, mark,
             )
         out[name] = timing
     return out
+
+
+def _plan_fields(timings: Mapping[str, TapTiming]) -> dict:
+    return dict(
+        branches=tuple((name, t.winner) for name, t in sorted(timings.items())),
+        bk_branches=tuple(
+            (name, t.bk_winner) for name, t in sorted(timings.items())
+        ),
+        timings=tuple(t.as_tuple(name) for name, t in sorted(timings.items())),
+    )
 
 
 def build_plan(
@@ -141,9 +244,121 @@ def build_plan(
     return ClipPlan(
         fingerprint=shape_fingerprint(metas),
         device=device_string(),
-        branches=tuple((name, t.winner) for name, t in sorted(timings.items())),
         arch=arch,
-        timings=tuple(
-            (name, t.ghost_us, t.instantiate_us) for name, t in sorted(timings.items())
-        ),
+        **_plan_fields(timings),
     )
+
+
+def remeasure_at_batch(
+    plan: ClipPlan,
+    metas: Mapping[str, TapMeta],
+    physical_batch: int,
+    cfg: MeasureConfig = MeasureConfig(),
+    *,
+    cap_bytes: int = 1 << 30,
+) -> ClipPlan:
+    """Re-time the branches at the tuned physical batch and refresh the plan.
+
+    Branch timings are first measured at the (row-clamped) probe batch;
+    after the max-batch search settles, the step actually runs at
+    ``physical_batch``.  Timings scale ~linearly in rows so flips are rare,
+    but re-measuring closes the loop and removes the assumption (ROADMAP
+    "profile at the tuned physical batch").  The fingerprint is batch-free,
+    so the refreshed plan stays valid for the same model/device.
+
+    ``cap_bytes`` bounds the largest profiling array per tap (tuning must
+    never OOM the device it is sizing — the max-batch search certified the
+    *training* graph, not per-tap psg instantiation at full rows): taps whose
+    full-batch measurement would exceed it are clamped to the largest batch
+    that fits, which preserves the comparison since timings scale ~linearly.
+    """
+    rebatched = {}
+    clamped = 0
+    for name, m in metas.items():
+        b = physical_batch
+        if m.kind == "matmul":
+            reps = max(m.n_stack * max(m.n_groups, 1), 1)
+            # a, g, and (bk_inst) psg are all live at once per profiled row
+            per_row = 4 * (m.T * m.D + m.T * m.p + m.D * m.p)
+            b_cap = max(1, cap_bytes // max(per_row * reps, 1))
+            if b_cap < b:
+                b, clamped = b_cap, clamped + 1
+        rebatched[name] = dataclasses.replace(m, batch_size=b)
+    if clamped:
+        log.info("remeasure: %d tap(s) clamped below physical batch %d to "
+                 "respect the %.1fGB profiling cap", clamped, physical_batch,
+                 cap_bytes / 1024**3)
+    cfg_full = dataclasses.replace(cfg, max_rows=None)
+    timings = measure_branches(rebatched, cfg_full)
+    flips = sum(
+        1 for name, b in plan.branches if timings.get(name) and
+        timings[name].winner != b
+    ) + sum(
+        1 for name, b in plan.bk_branches if timings.get(name) and
+        timings[name].bk_winner != b
+    )
+    if flips:
+        log.info("re-measuring at physical batch %d flipped %d branch(es)",
+                 physical_batch, flips)
+    return dataclasses.replace(
+        plan, measured_at_physical=True, **_plan_fields(timings)
+    )
+
+
+def close_physical_batch_loop(
+    plan: ClipPlan,
+    metas: Mapping[str, TapMeta],
+    search,  # (plan) -> max physical batch under the caller's budget, <=0 = none
+    logical_batch: int,
+    budget_bytes: int,
+    cfg: MeasureConfig = MeasureConfig(),
+    *,
+    max_iters: int = 3,
+) -> ClipPlan:
+    """Converge {branch maps, physical batch} to a mutually consistent pair.
+
+    The coupled loop behind the ROADMAP "profile at the tuned physical
+    batch" item: branch timings must be taken at the batch that will run,
+    but flipping a branch changes per-tap clipping memory, which can change
+    the max batch that fits — so re-measure and re-search alternate until a
+    fixpoint (almost always one round; ``max_iters`` bounds pathological
+    oscillation).  On a failed re-search the last *certified* plan (branches
+    and batch from the same measurement) is returned rather than a plan
+    whose branches contradict its own timings.
+    """
+    from repro.tuner.max_batch import derive_accumulation
+
+    mp = plan.physical_batch
+    if not mp or mp <= 0:
+        return plan
+    for _ in range(max_iters):
+        certified = plan
+        plan = remeasure_at_batch(plan, metas, mp, cfg)
+        if (plan.branches, plan.bk_branches) == (
+            certified.branches, certified.bk_branches
+        ):
+            return plan  # branches stable at the certified batch: converged
+        mp2 = search(plan)
+        if mp2 <= 0:
+            log.warning(
+                "re-measured branches no longer fit the budget at batch %d; "
+                "keeping the certified plan", mp,
+            )
+            return certified
+        if mp2 == mp:
+            return plan  # flips did not move the certificate: converged
+        log.info("branch flips moved the max physical batch %d -> %d; "
+                 "re-measuring there", mp, mp2)
+        _, steps = derive_accumulation(logical_batch, mp2)
+        plan = dataclasses.replace(
+            plan.replace_batch(
+                physical_batch=mp2, logical_batch=logical_batch,
+                accumulation_steps=steps, budget_bytes=budget_bytes,
+            ),
+            # timings are still from mp; only the next remeasure may claim it
+            measured_at_physical=False,
+        )
+        mp = mp2
+    log.warning("branch/batch loop did not converge in %d rounds; timings "
+                "were last taken one batch behind", max_iters)
+    return plan

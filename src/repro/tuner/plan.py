@@ -3,7 +3,7 @@
 The analytic rule Eq (4.1) predicts which branch (ghost norm vs gradient
 instantiation) is cheaper from operation counts alone.  On real hardware the
 winner also depends on kernel launch overhead, tiling, dtype, and fusion, so
-the tuner *measures* both branches per tap (measure.py) and records the
+the tuner *measures* the branches per tap (measure.py) and records the
 winners here, together with enough provenance to know when the plan is stale:
 
 - a **shape fingerprint** over every tap's (kind, T, D, p, groups, stack,
@@ -11,9 +11,19 @@ winners here, together with enough provenance to know when the plan is stale:
   any physical microbatch (the max-batch search varies B);
 - the **device string** (platform + device kind) the plan was measured on.
 
+Plans are **mode-aware** (three-way tuning): each matmul tap is timed on
+{ghost norm, instantiated norm, book-keeping ghost-bank, book-keeping
+psg-bank, its share of the second backward}, and two branch maps are kept —
+``branches`` for the second-backward modes (ghost vs instantiate norms) and
+``bk_branches`` for ``bk_mixed`` (which residual bank to keep).  The
+book-keeping mode skips the second backward entirely, so its branch
+economics differ and the two maps routinely disagree on the same tap.
+``recommended_mode()`` compares the measured per-step totals of
+{mixed_ghost, bk_mixed}.
+
 ``matches(metas)`` is the staleness gate; every consumption goes through it.
-``overrides_for(metas)`` returns the per-tap branch map when the plan
-matches the current model/device and an empty map (analytic fallback)
+``overrides_for(metas, mode=...)`` returns the per-tap branch map when the
+plan matches the current model/device and an empty map (analytic fallback)
 otherwise — a stale plan can never silently redirect a branch, and callers
 using ``physical_batch`` must check ``matches`` first (launch/train.py
 does).  Plans round-trip through JSON and live under
@@ -36,8 +46,9 @@ from repro.utils.logging import get_logger
 
 log = get_logger("tuner.plan")
 
-PLAN_VERSION = 1
+PLAN_VERSION = 2
 BRANCHES = ("ghost", "instantiate")
+TUNED_MODES = ("mixed_ghost", "bk_mixed")
 
 
 def device_string(device: Optional[Any] = None) -> str:
@@ -72,14 +83,38 @@ def shape_fingerprint(metas: Mapping[str, TapMeta]) -> str:
 
 @dataclasses.dataclass(frozen=True)
 class TapTiming:
-    """Measured branch costs for one tap (microseconds, median-of-k)."""
+    """Measured branch costs for one tap (microseconds, median-of-k).
+
+    ``ghost_us`` / ``instantiate_us`` time the norm kernels of the
+    second-backward modes; ``bk_ghost_us`` / ``bk_instantiate_us`` time the
+    full book-keeping pipelines (norm + bank + weighted-grad contraction);
+    ``second_bwd_us`` times the tap's share of a second backward pass (its
+    dW + dX matmuls) — what book-keeping avoids paying.
+    """
 
     ghost_us: float
     instantiate_us: float
+    bk_ghost_us: float = 0.0
+    bk_instantiate_us: float = 0.0
+    second_bwd_us: float = 0.0
 
     @property
     def winner(self) -> str:
         return "ghost" if self.ghost_us <= self.instantiate_us else "instantiate"
+
+    @property
+    def bk_winner(self) -> str:
+        return "ghost" if self.bk_ghost_us <= self.bk_instantiate_us else "instantiate"
+
+    def mode_cost_us(self, mode: str) -> float:
+        """Measured per-tap cost of running this tap under ``mode``."""
+        if mode == "bk_mixed":
+            return min(self.bk_ghost_us, self.bk_instantiate_us)
+        return min(self.ghost_us, self.instantiate_us) + self.second_bwd_us
+
+    def as_tuple(self, name: str) -> tuple:
+        return (name, self.ghost_us, self.instantiate_us,
+                self.bk_ghost_us, self.bk_instantiate_us, self.second_bwd_us)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,8 +124,10 @@ class ClipPlan:
     fingerprint: str
     device: str
     # (tap_name, branch) pairs, sorted by name; matmul taps only — other
-    # kinds have a forced branch the tuner never overrides.
+    # kinds have a forced branch the tuner never overrides.  ``branches``
+    # serves the second-backward modes, ``bk_branches`` serves bk_mixed.
     branches: tuple[tuple[str, str], ...] = ()
+    bk_branches: tuple[tuple[str, str], ...] = ()
     # Table-7 measurement reused as a runtime feature: the largest physical
     # microbatch that fits the memory budget, and the accumulation the tuning
     # run derived for its logical batch (informational — consumers re-derive
@@ -101,14 +138,18 @@ class ClipPlan:
     # the budget the max-batch search ran under; a cached plan is only valid
     # for a re-run with the same budget
     budget_bytes: Optional[int] = None
+    # True once branch timings were re-measured at the tuned physical batch
+    # (the ROADMAP "profile at the tuned physical batch" loop)
+    measured_at_physical: bool = False
     # provenance
     arch: Optional[str] = None
-    timings: tuple[tuple[str, float, float], ...] = ()  # (name, ghost, inst) us
+    # (name, ghost, inst, bk_ghost, bk_inst, second_bwd) microseconds
+    timings: tuple[tuple[str, float, float, float, float, float], ...] = ()
     version: int = PLAN_VERSION
 
     # -- consumption -----------------------------------------------------
-    def branch_map(self) -> dict[str, str]:
-        return dict(self.branches)
+    def branch_map(self, mode: str = "mixed_ghost") -> dict[str, str]:
+        return dict(self.bk_branches if mode == "bk_mixed" else self.branches)
 
     def matches(
         self, metas: Mapping[str, TapMeta], device: Optional[Any] = None
@@ -125,30 +166,59 @@ class ClipPlan:
         )
 
     def overrides_for(
-        self, metas: Mapping[str, TapMeta], device: Optional[Any] = None
+        self,
+        metas: Mapping[str, TapMeta],
+        device: Optional[Any] = None,
+        mode: str = "mixed_ghost",
     ) -> dict[str, str]:
         """Per-tap branch overrides, or {} (analytic fallback) when stale.
 
         A plan is stale when it was measured on a different device or for
         different tap shapes; using it would apply timings that no longer
-        describe the hardware about to run.
+        describe the hardware about to run.  ``mode`` selects the branch
+        map: ``bk_mixed`` banks residuals instead of paying the second
+        backward, so its measured winners are stored separately.
         """
         dev = device_string(device)
         if self.device != dev:
             log.warning(
                 "ClipPlan measured on %s but running on %s; "
-                "falling back to the analytic Eq-(4.1) decision", self.device, dev,
+                "falling back to the analytic decision", self.device, dev,
             )
             return {}
         fp = shape_fingerprint(metas)
         if self.fingerprint != fp:
             log.warning(
                 "ClipPlan fingerprint %s does not match model taps (%s); "
-                "falling back to the analytic Eq-(4.1) decision",
+                "falling back to the analytic decision",
                 self.fingerprint, fp,
             )
             return {}
-        return {name: b for name, b in self.branches if name in metas}
+        branches = self.bk_branches if mode == "bk_mixed" else self.branches
+        return {name: b for name, b in branches if name in metas}
+
+    def tap_timings(self) -> dict[str, TapTiming]:
+        return {
+            name: TapTiming(g, i, bg, bi, sb)
+            for name, g, i, bg, bi, sb in self.timings
+        }
+
+    def mode_cost_us(self, mode: str) -> float:
+        """Measured per-step clipping cost (us) of running under ``mode``."""
+        return sum(t.mode_cost_us(mode) for t in self.tap_timings().values())
+
+    def recommended_mode(self) -> str:
+        """The measured three-way verdict: cheapest tuned mode per step.
+
+        Compares {ghost-or-instantiate norms + second backward} against
+        {book-keeping banks + weighted einsums} using the per-tap timings.
+        Memory is not in this comparison — book-keeping banks residuals, so
+        callers on the edge of the budget should trust the max-batch search
+        (which compiles the actual mode) over this time-only verdict.
+        """
+        if not self.timings:
+            return "mixed_ghost"
+        return min(TUNED_MODES, key=self.mode_cost_us)
 
     def replace_batch(
         self,
@@ -170,6 +240,7 @@ class ClipPlan:
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
         d["branches"] = [list(b) for b in self.branches]
+        d["bk_branches"] = [list(b) for b in self.bk_branches]
         d["timings"] = [list(t) for t in self.timings]
         return json.dumps(d, indent=2, sort_keys=True)
 
@@ -180,20 +251,24 @@ class ClipPlan:
         if version != PLAN_VERSION:
             raise ValueError(f"unsupported ClipPlan version {version}")
         branches = tuple((str(n), str(b)) for n, b in d.get("branches", ()))
-        for _, b in branches:
+        bk_branches = tuple((str(n), str(b)) for n, b in d.get("bk_branches", ()))
+        for _, b in branches + bk_branches:
             if b not in BRANCHES:
                 raise ValueError(f"invalid branch {b!r} in ClipPlan")
         return cls(
             fingerprint=str(d["fingerprint"]),
             device=str(d["device"]),
             branches=branches,
+            bk_branches=bk_branches,
             physical_batch=d.get("physical_batch"),
             logical_batch=d.get("logical_batch"),
             accumulation_steps=d.get("accumulation_steps"),
             budget_bytes=d.get("budget_bytes"),
+            measured_at_physical=bool(d.get("measured_at_physical", False)),
             arch=d.get("arch"),
             timings=tuple(
-                (str(n), float(g), float(i)) for n, g, i in d.get("timings", ())
+                (str(n), float(g), float(i), float(bg), float(bi), float(sb))
+                for n, g, i, bg, bi, sb in d.get("timings", ())
             ),
             version=version,
         )

@@ -27,7 +27,7 @@ from repro.nn.xlstm import MLSTMBlock, SLSTMBlock
 
 from helpers import lm_batch, max_tree_diff
 
-MODES = ["ghost", "fastgradclip", "mixed_ghost", "bk_mixed"]
+MODES = ["ghost", "fastgradclip", "mixed_ghost", "bk_mixed", "bk_mixed_taps"]
 
 
 def _run_all_modes(loss_with_ctx, params, batch, clip_norm=0.3):
@@ -220,5 +220,115 @@ def test_decision_modes_agree_on_gradients_not_costs():
 
     branches_space = {k: decide(v, mode="mixed_ghost", by="space") for k, v in meta.items()}
     branches_time = {k: decide(v, mode="mixed_ghost", by="time") for k, v in meta.items()}
+    branches_bk = {k: decide(v, mode="bk_mixed") for k, v in meta.items()}
     assert set(branches_space.values()) <= {"ghost", "instantiate"}
     assert set(branches_time.values()) <= {"ghost", "instantiate"}
+    assert set(branches_bk.values()) <= {"ghost", "instantiate"}
+
+
+def test_coverage_validation_raises_on_duplicate_taps():
+    """Two taps claiming the same param leaf double-count its norm: raise."""
+    m = _MLPModel()
+    batch = lm_batch(jax.random.PRNGKey(1), 2, 4, 17)
+
+    def doubled_loss(params, b, ctx):
+        # the same Dense applied twice under different tap names but the
+        # SAME param path: classic accidental weight sharing
+        x = m.emb(params["emb"], b["tokens"], ctx.scope("emb"))
+        h = jax.nn.gelu(m.l1(params["l1"], x, ctx.scope("l1")))
+        h = h + m.l1(params["l1"], x, ctx.scope("l1_again").scope("l1"))
+        h = m.norm(params["n"], h, ctx.scope("n"))
+        logits = m.l2(params["l2"], h, ctx.scope("l2"))
+        return jnp.mean(logits, axis=(1, 2))
+
+    meta = discover_meta(doubled_loss, m.params, batch)
+    # rewrite the duplicate tap's param_path back to the shared leaf (the
+    # scope prefix would otherwise make it a distinct — missing — path)
+    import dataclasses as _dc
+
+    dup = {}
+    for name, mm in meta.items():
+        if name.startswith("l1_again/"):
+            mm = _dc.replace(mm, param_path="l1/w", bias_path="l1/b")
+        dup[name] = mm
+    with pytest.raises(ValueError) as e:
+        validate_coverage(dup, m.params)
+    assert "l1/out" in str(e.value) and "l1_again/l1/out" in str(e.value)
+    assert "double-counted" in str(e.value)
+
+
+def test_frozen_prefixes_bk_and_ghost_agree_on_covered_leaves():
+    """Untapped-but-frozen params: clean coverage, zero bk grads, and the
+    fused bk gradients still match mixed_ghost on every covered leaf."""
+    m = _MLPModel()
+    frozen_head = Dense("l2", 12, 17, use_bias=False, dp=False)
+
+    def loss(params, b, ctx):
+        x = m.emb(params["emb"], b["tokens"], ctx.scope("emb"))
+        h = jax.nn.gelu(m.l1(params["l1"], x, ctx.scope("l1")))
+        logits = frozen_head(params["l2"], h, ctx.scope("l2"))
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, b["labels"][..., None], axis=-1)[..., 0]
+        return jnp.mean(nll * b["mask"][:, None], axis=-1)
+
+    params = {"emb": m.params["emb"], "l1": m.params["l1"],
+              "l2": frozen_head.init(jax.random.PRNGKey(7))}
+    batch = lm_batch(jax.random.PRNGKey(1), 4, 6, 17)
+    batch["mask"] = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+
+    meta = discover_meta(loss, params, batch)
+    assert validate_coverage(meta, params) == ["l2/w"]
+    assert validate_coverage(meta, params, frozen_prefixes=("l2",)) == []
+
+    cfg = dict(clip_norm=0.3, frozen_prefixes=("l2",))
+    out = {}
+    for mode in ["mixed_ghost", "bk_mixed", "bk_mixed_taps"]:
+        fn = jax.jit(dp_value_and_clipped_grad(loss, ClipConfig(mode=mode, **cfg)))
+        out[mode] = fn(params, batch)
+    _, g_ref, aux_ref = out["mixed_ghost"]
+    for mode in ["bk_mixed", "bk_mixed_taps"]:
+        _, g, aux = out[mode]
+        assert jnp.allclose(
+            aux["per_sample_norms"], aux_ref["per_sample_norms"], atol=1e-5
+        ), mode
+        # frozen leaf: book-keeping owes it nothing (zeros) — the
+        # second-backward engine reports its unclipped weighted grad, which
+        # is why frozen params must never reach the optimizer
+        assert float(jnp.max(jnp.abs(g["l2"]["w"]))) == 0.0
+        for key in ("emb", "l1"):
+            assert max_tree_diff(g_ref[key], g[key]) < 5e-5, (mode, key)
+
+
+def test_fused_bk_never_pays_the_explicit_engine_memory():
+    """The fused bk engine must beat the zero-taps + acts-dict formulation
+    on XLA's compiled peak-memory model (no tap-sized zeros, no acts dict)."""
+    gn = GroupNorm("gn", 8, groups=4)
+    c1 = Conv2d("c1", 3, 8, (3, 3), padding="SAME")
+    head = Dense("head", 8, 10)
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    params = {"c1": c1.init(ks[0]), "gn": gn.init(ks[1]), "head": head.init(ks[2])}
+
+    def loss(params, batch, ctx):
+        h = jax.nn.relu(gn(params["gn"],
+                           c1(params["c1"], batch["image"], ctx.scope("c1")),
+                           ctx.scope("gn")))
+        h = global_avg_pool(h)
+        logits = head(params["head"], h[:, None, :], ctx.scope("head"))[:, 0]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+
+    batch = {
+        "image": jax.random.normal(jax.random.PRNGKey(4), (16, 16, 16, 3)),
+        "y": jax.random.randint(jax.random.PRNGKey(5), (16,), 0, 10),
+    }
+    specs = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), (params, batch)
+    )
+
+    def peak(mode):
+        fn = dp_value_and_clipped_grad(loss, ClipConfig(mode=mode))
+        ma = jax.jit(fn).lower(*specs).compile().memory_analysis()
+        return int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                   + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+
+    assert peak("bk_mixed") < peak("bk_mixed_taps")

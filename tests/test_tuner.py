@@ -25,6 +25,7 @@ from repro.tuner import (
     device_string,
     find_max_physical_batch,
     max_batch_by_memory,
+    remeasure_at_batch,
     shape_fingerprint,
 )
 
@@ -82,6 +83,42 @@ def test_override_never_wins_over_reference_modes():
     assert decide(m, mode="fastgradclip", override="ghost") == "instantiate"
 
 
+def test_bk_branch_rule_is_bank_size_driven():
+    # lm_head-like: T small, pD huge -> the (a, g) book is far smaller than
+    # per-sample gradient instantiation
+    m = _meta(T=1, D=64, p=4096)
+    assert decide(m, mode="bk_mixed") == "ghost"
+    # conv-like: T large, pD small -> bank the per-sample gradients
+    m = _meta(T=1024, D=27, p=32)
+    assert decide(m, mode="bk_mixed") == "instantiate"
+    # the two rules legitimately disagree: Eq 4.1 only weighs the norm
+    # computation (2T^2 vs pD); bk also has to HOLD the book, so a tap can
+    # be ghost-cheap to norm yet psg-cheap to bank
+    m = _meta(T=16, D=32, p=32)
+    assert decide(m, mode="mixed_ghost") == "ghost"  # 2T^2 = 512 < pD = 1024
+    # book = T(D+p) + 2T^2 = 1024 + 512 = 1536 >= pD = 1024
+    assert decide(m, mode="bk_mixed") == "instantiate"
+    # raw-activation awareness: a stride-2 conv's raw input is ~2.25x smaller
+    # than its unfolded patches, flipping the book back to affordable
+    conv_meta = dataclasses.replace(
+        _meta(T=64, D=576, p=64, batch=2),
+        a_shape=(2, 16, 16, 64), a_dtype=jnp.float32,
+    )
+    # book = 16*16*64 + 64*64 + 2*64^2 = 28672 < pD = 36864
+    assert decide(conv_meta, mode="bk_mixed") == "ghost"
+    # unfolded-size fallback (no recorded activation shape): instantiate
+    # book = 64*576 + 64*64 + 8192 = 49152 >= 36864
+    no_a = _meta(T=64, D=576, p=64)
+    assert decide(no_a, mode="bk_mixed") == "instantiate"
+
+
+def test_bk_override_wins_and_stays_exact_branchwise():
+    m = _meta(T=1, D=64, p=4096)
+    assert decide(m, mode="bk_mixed", override="instantiate") == "instantiate"
+    with pytest.raises(ValueError):
+        decide(m, mode="bk_mixed", override="banana")
+
+
 # -------------------------------------------------------------------- plan --
 def _tiny_metas():
     return {
@@ -97,30 +134,60 @@ def test_clipplan_json_round_trip(tmp_path):
         fingerprint=shape_fingerprint(metas),
         device=device_string(),
         branches=(("a/out", "instantiate"), ("b/out", "ghost")),
+        bk_branches=(("a/out", "instantiate"), ("b/out", "instantiate")),
         physical_batch=64,
         logical_batch=256,
         accumulation_steps=4,
+        measured_at_physical=True,
         arch="tiny",
-        timings=(("a/out", 10.0, 5.0), ("b/out", 3.0, 7.0)),
+        timings=(("a/out", 10.0, 5.0, 9.0, 6.0, 20.0),
+                 ("b/out", 3.0, 7.0, 8.0, 4.0, 12.0)),
     )
     path = str(tmp_path / "plan.json")
     plan.save(path)
     loaded = ClipPlan.load(path)
     assert loaded == plan
     assert loaded.branch_map() == {"a/out": "instantiate", "b/out": "ghost"}
+    assert loaded.branch_map("bk_mixed") == {
+        "a/out": "instantiate", "b/out": "instantiate"
+    }
     # the artifact is plain JSON, inspectable by other tooling
     raw = json.loads(open(path).read())
     assert raw["physical_batch"] == 64
+    assert raw["measured_at_physical"] is True
+
+
+def test_clipplan_mode_costs_and_recommendation():
+    # mixed_ghost: min(10,5)+20 + min(3,7)+12 = 40; bk: min(9,6)+min(8,4)=10
+    plan = ClipPlan(
+        fingerprint="f", device="d",
+        timings=(("a", 10.0, 5.0, 9.0, 6.0, 20.0),
+                 ("b", 3.0, 7.0, 8.0, 4.0, 12.0)),
+    )
+    assert plan.mode_cost_us("mixed_ghost") == 40.0
+    assert plan.mode_cost_us("bk_mixed") == 10.0
+    assert plan.recommended_mode() == "bk_mixed"
+    assert ClipPlan(fingerprint="f", device="d").recommended_mode() == "mixed_ghost"
 
 
 def test_clipplan_rejects_bad_json():
     with pytest.raises(ValueError):
         ClipPlan.from_json(json.dumps({"fingerprint": "x", "device": "y",
                                        "version": 99}))
+    # pre-three-way (v1) artifacts are stale by construction: their branch
+    # maps know nothing about the bk bank decision
+    with pytest.raises(ValueError):
+        ClipPlan.from_json(json.dumps({"fingerprint": "x", "device": "y",
+                                       "version": 1}))
     with pytest.raises(ValueError):
         ClipPlan.from_json(json.dumps({
-            "fingerprint": "x", "device": "y", "version": 1,
+            "fingerprint": "x", "device": "y", "version": 2,
             "branches": [["a", "banana"]],
+        }))
+    with pytest.raises(ValueError):
+        ClipPlan.from_json(json.dumps({
+            "fingerprint": "x", "device": "y", "version": 2,
+            "bk_branches": [["a", "banana"]],
         }))
 
 
@@ -129,8 +196,13 @@ def test_stale_plan_rejected_falls_back_to_analytic():
     good = ClipPlan(
         fingerprint=shape_fingerprint(metas), device=device_string(),
         branches=(("a/out", "instantiate"),),
+        bk_branches=(("a/out", "ghost"), ("b/out", "ghost")),
     )
     assert good.overrides_for(metas) == {"a/out": "instantiate"}
+    # mode-specific maps: bk_mixed reads the bank branches
+    assert good.overrides_for(metas, mode="bk_mixed") == {
+        "a/out": "ghost", "b/out": "ghost"
+    }
 
     # different shapes (stale fingerprint) -> no overrides
     stale = dataclasses.replace(good, fingerprint="deadbeefdeadbeef")
@@ -204,16 +276,31 @@ def _two_layer_setup():
     return model, params, batch
 
 
-@pytest.mark.parametrize("mode", ["mixed_ghost", "mixed_ghost_taps", "bk_mixed"])
+@pytest.mark.parametrize(
+    "mode", ["mixed_ghost", "mixed_ghost_taps", "bk_mixed", "bk_mixed_taps"]
+)
 def test_plan_changes_branch_not_math(mode):
-    """Clipped grads under an adversarially flipped plan == analytic exactly."""
+    """Clipped grads under an adversarially flipped three-way plan == analytic.
+
+    Both branch maps are inverted: the norm branch of the second-backward
+    modes AND the bank branch of book-keeping.  Either way the math is
+    identical — the plan moves cost, never results.
+    """
     model, params, batch = _two_layer_setup()
     metas = discover_meta(model.loss_with_ctx, params, batch)
+
+    def flip(branch):
+        return "instantiate" if branch == "ghost" else "ghost"
+
     flipped = ClipPlan(
         fingerprint=shape_fingerprint(metas),
         device=device_string(),
         branches=tuple(
-            (n, "instantiate" if decide(m, mode="mixed_ghost") == "ghost" else "ghost")
+            (n, flip(decide(m, mode="mixed_ghost")))
+            for n, m in sorted(metas.items()) if m.kind == "matmul"
+        ),
+        bk_branches=tuple(
+            (n, flip(decide(m, mode="bk_mixed")))
             for n, m in sorted(metas.items()) if m.kind == "matmul"
         ),
     )
@@ -251,6 +338,68 @@ def test_measured_plan_round_trips_through_engine(tmp_path):
     _, g1, _ = f_analytic(params, batch)
     _, g2, _ = f_plan(params, batch)
     assert max_tree_diff(g1, g2) < 1e-5
+
+
+def test_measure_tap_conv_times_real_bk_kernels():
+    """Conv taps must time the kernels the engine actually runs: the psg bank
+    goes through the conv op's vjp on raw activations (no im2col)."""
+    from repro.core.taps import Ctx
+    from repro.nn.conv import Conv2d, global_avg_pool
+
+    conv = Conv2d("c", 3, 8, (3, 3), strides=(2, 2), padding="SAME")
+    head = Dense("head", 8, 5)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    params = {"c": conv.init(k1), "head": head.init(k2)}
+
+    def loss(params, batch, ctx):
+        h = conv(params["c"], batch["image"], ctx.scope("c"))
+        h = global_avg_pool(h)
+        out = head(params["head"], h[:, None, :], ctx.scope("head"))[:, 0]
+        return jnp.sum(out * out, axis=-1)
+
+    batch = {"image": jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))}
+    metas = discover_meta(loss, params, batch)
+    (conv_meta,) = [m for m in metas.values() if m.conv is not None]
+    assert conv_meta.a_shape == (2, 8, 8, 3)
+    from repro.tuner.measure import measure_tap
+
+    t = measure_tap(conv_meta, MeasureConfig(repeats=1, warmup=1, max_rows=2))
+    for v in (t.ghost_us, t.instantiate_us, t.bk_ghost_us,
+              t.bk_instantiate_us, t.second_bwd_us):
+        assert v > 0.0
+
+
+def test_remeasure_at_physical_batch_closes_the_loop():
+    """ROADMAP loop: after max_batch settles, branch timings are re-taken at
+    the tuned physical batch and only then does the plan finalize."""
+    model, params, batch = _two_layer_setup()
+    metas = discover_meta(model.loss_with_ctx, params, batch)
+    cfg = MeasureConfig(repeats=1, warmup=1, max_rows=2)
+    plan = build_plan(metas, measure=cfg, arch="twolayer")
+    assert not plan.measured_at_physical
+    plan2 = remeasure_at_batch(plan, metas, 8, cfg)
+    assert plan2.measured_at_physical
+    # batch-free identity: the refreshed plan stays valid for the model
+    assert plan2.fingerprint == plan.fingerprint
+    assert plan2.matches(metas)
+    assert set(dict(plan2.branches)) == set(dict(plan.branches))
+    assert set(dict(plan2.bk_branches)) == set(dict(plan.bk_branches))
+
+
+def test_engine_tune_remeasures_at_tuned_batch(tmp_path, monkeypatch):
+    from repro.core.engine import PrivacyEngine
+
+    monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path))
+    model, params, batch = _two_layer_setup()
+    eng = PrivacyEngine(
+        loss_with_ctx=model.loss_with_ctx, batch_size=4, sample_size=1000,
+        steps=10, max_grad_norm=1.0, noise_multiplier=1.0,
+    )
+    plan = eng.tune(params, batch, arch="twolayer", plan_path=None,
+                    use_cache=False, measure=MeasureConfig(repeats=1, warmup=1),
+                    budget_bytes=1 << 30, hi_cap=16)
+    assert plan.physical_batch == 16
+    assert plan.measured_at_physical
 
 
 def test_engine_tune_cache_hit(tmp_path, monkeypatch):
