@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo references in docs/*.md and README.md.
+
+Two kinds of reference are checked, both relative to the repo root (or to
+the doc's own directory, whichever resolves):
+
+1. markdown links ``[text](target)`` whose target is not an URL or a pure
+   in-page anchor — the target file (or directory) must exist;
+2. backtick code anchors `` `path/to/file.py:123` `` (the docs' file:line
+   claim style) — the file must exist AND have at least that many lines, so
+   a refactor that moves an anchored claim fails CI instead of silently
+   pointing documentation at unrelated code.
+
+Exit status: 0 when every reference resolves, 1 otherwise (one line per
+broken reference).  No dependencies beyond the stdlib; runs as the tier-1
+``docs`` CI job (.github/workflows/tier1.yml) and from scripts/tier1.sh.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `src/repro/core/ghost.py:123` or `tests/test_tuner.py:43-58` inside backticks
+FILE_LINE = re.compile(r"`([A-Za-z0-9_./-]+\.[A-Za-z0-9]+):(\d+)(?:-(\d+))?`")
+
+
+def _line_count(path: Path, cache: dict) -> int:
+    if path not in cache:
+        cache[path] = sum(1 for _ in path.open(encoding="utf-8"))
+    return cache[path]
+
+
+def check_file(doc: Path, cache: dict) -> list[str]:
+    errors = []
+    text = doc.read_text(encoding="utf-8")
+    rel = doc.relative_to(REPO)
+
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path_part = target.split("#", 1)[0]
+        if not path_part:
+            continue
+        candidates = [REPO / path_part, doc.parent / path_part]
+        if not any(c.exists() for c in candidates):
+            errors.append(f"{rel}: broken link target {target!r}")
+
+    for m in FILE_LINE.finditer(text):
+        path_part, lo, hi = m.group(1), int(m.group(2)), m.group(3)
+        candidates = [REPO / path_part, doc.parent / path_part]
+        hit = next((c for c in candidates if c.is_file()), None)
+        if hit is None:
+            errors.append(f"{rel}: file:line anchor to missing file {path_part!r}")
+            continue
+        last = int(hi) if hi else lo
+        n = _line_count(hit, cache)
+        if last > n:
+            errors.append(
+                f"{rel}: anchor {path_part}:{m.group(2)}"
+                f"{'-' + hi if hi else ''} beyond end of file ({n} lines)"
+            )
+    return errors
+
+
+def main() -> int:
+    docs = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+    docs = [d for d in docs if d.exists()]
+    cache: dict = {}
+    errors = []
+    for doc in docs:
+        errors.extend(check_file(doc, cache))
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print(f"checked {len(docs)} doc(s): "
+          f"{'OK' if not errors else f'{len(errors)} broken reference(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

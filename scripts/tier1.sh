@@ -13,3 +13,4 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python -m pytest -x -q
 python -m benchmarks.run --fast --only table1,table3,modes --out-dir "${BENCH_OUT:-.}"
+python scripts/check_docs_links.py

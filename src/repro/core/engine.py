@@ -92,6 +92,11 @@ class PrivacyEngine:
         plan when the certificate still holds, or ``None`` when nothing fits
         the stored budget under the current configuration — the caller must
         then fall back rather than train uncertified.
+
+        On a multi-host fleet, pass a ``batch`` probe already sliced to the
+        per-host share (parallel.sharding.per_host_batch): the certificate
+        describes one host's HBM, and compiling it at the global batch
+        would certify memory no single device ever holds.
         """
         plan = self.plan
         if plan is None or not getattr(plan, "budget_bytes", None):
@@ -129,6 +134,8 @@ class PrivacyEngine:
         plan_path: Optional[str] = "auto",
         use_cache: bool = True,
         remeasure_at_physical: bool = True,
+        consensus: bool = False,
+        gather_fn: Optional[Callable] = None,
     ) -> Any:
         """Profile the three-way branch decision per tap on this device,
         search the max physical microbatch, adopt and (by default) cache the
@@ -149,6 +156,17 @@ class PrivacyEngine:
         writing.  Returns the plan.  The clipped gradients under the plan are
         bit-compatible with the analytic decision — only the branch (cost)
         changes, never the math.
+
+        ``consensus=True`` makes tuning fleet-safe (repro.tuner.consensus):
+        only the elected leader of each device kind measures; every rank
+        then adopts the byte-identical fleet-agreed plan (or raises
+        ``PlanConsensusError`` before anything is traced).  On a single
+        process this is a cheap no-op agreement that stamps the plan's
+        consensus provenance.  ``gather_fn`` injects the all-gather
+        primitive (tests simulate fleets without ``jax.distributed``).
+        On multi-host fleets, pass a ``batch`` already sliced to the
+        per-host share (parallel.sharding.per_host_batch) so the max-batch
+        certificate describes one host's HBM, not the global batch.
         """
         import os
 
@@ -162,6 +180,31 @@ class PrivacyEngine:
 
         budget = _mb.DEFAULT_BUDGET_BYTES if budget_bytes is None else budget_bytes
         meta = discover_meta(self.loss_with_ctx, params, batch)
+
+        def agree_and_save(measured):
+            # one agreement path for every consensus branch below: submit
+            # this rank's measurement (None on non-leaders), persist what
+            # the fleet adopted — never the rank-local measurement
+            from repro.tuner import consensus as _cons
+
+            adopted = _cons.fleet_agree(measured, meta, gather_fn=gather_fn)
+            if plan_path is not None:
+                adopted.save(
+                    default_plan_path(arch, adopted.fingerprint)
+                    if plan_path == "auto" else plan_path
+                )
+            return adopted
+
+        if consensus:
+            from repro.tuner import consensus as _cons
+
+            roles = _cons.fleet_roles(gather_fn=gather_fn)
+            if not roles.is_leader:
+                # one measurement per device kind: non-leaders skip straight
+                # to the agreement and adopt (and cache) the leader's plan
+                adopted = agree_and_save(None)
+                self.use_plan(adopted)
+                return adopted
         if use_cache:
             cached = None
             if plan_path == "auto":
@@ -177,7 +220,20 @@ class PrivacyEngine:
             budget_ok = not search_max_batch or (
                 cached is not None and cached.budget_bytes == budget
             )
+            from repro.tuner.plan import device_string as _device_string
+
+            if consensus and cached is not None and cached.device != _device_string():
+                # a cached plan this kind merely RATIFIED (measured by a
+                # different kind in an earlier fleet) is not a measurement
+                # of this hardware: submitting it would let a device kind
+                # dodge profiling forever — re-measure instead
+                log.info("cached plan was measured on %s, not this %s; "
+                         "re-measuring for the fleet agreement",
+                         cached.device, _device_string())
+                cached = None
             if cached is not None and budget_ok and cached.matches(meta):
+                if consensus:
+                    cached = agree_and_save(cached)
                 self.use_plan(cached)
                 return cached
         measure_cfg = measure or MeasureConfig()
@@ -218,12 +274,15 @@ class PrivacyEngine:
                         plan, meta, _search, self.batch_size, budget,
                         measure_cfg,
                     )
-        if plan_path is not None:
-            path = (
+        if consensus:
+            # leader rank: the fleet-adopted plan (possibly another kind's,
+            # under the mixed-kind tie-break) is what gets cached and used
+            plan = agree_and_save(plan)
+        elif plan_path is not None:
+            plan.save(
                 default_plan_path(arch, plan.fingerprint)
                 if plan_path == "auto" else plan_path
             )
-            plan.save(path)
         self.use_plan(plan)
         return plan
 

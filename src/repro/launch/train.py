@@ -20,6 +20,13 @@ cached ClipPlan.  ``--mode auto`` adopts the plan's measured
 batch is smaller than ``--batch`` (the logical batch), the loop
 automatically switches to gradient accumulation with the derived number of
 microsteps (the paper's virtual-step pattern).
+
+Multi-host fleets add ``--consensus`` (repro.tuner.consensus): tuning
+elects one leader per device kind, every rank adopts the byte-identical
+fleet-agreed plan (GSPMD requires all ranks to trace the same branch per
+tap), memory certificates compile at the per-host batch share, and a stale
+``--plan`` import fails loudly instead of silently falling back to the
+analytic rule on one rank while its peers trace the plan.
 """
 from __future__ import annotations
 
@@ -82,6 +89,12 @@ def parse_args(argv=None):
     ap.add_argument("--tune", action="store_true",
                     help="profile ghost-vs-instantiate per tap and search the "
                          "max physical microbatch before training")
+    ap.add_argument("--consensus", action="store_true",
+                    help="fleet-safe tuning/plan adoption: one measurement "
+                         "per device kind, every rank adopts the "
+                         "byte-identical agreed ClipPlan; with --plan, a "
+                         "stale import fails loudly instead of silently "
+                         "falling back (which would diverge across ranks)")
     ap.add_argument("--plan", default=None,
                     help="ClipPlan JSON to load (or, with --tune, to write)")
     ap.add_argument("--tune-budget-gb", type=float, default=16.0,
@@ -122,39 +135,64 @@ def run_once(args) -> int:
 
     state = make_train_state(model, jax.random.PRNGKey(0), optimizer)
 
-    # measured-cost autotuning: load a cached ClipPlan or profile one now
+    # measured-cost autotuning: load a cached ClipPlan or profile one now.
+    # Memory certificates (max-batch search / re-certification) compile at
+    # the PER-HOST share of the batch: on a fleet, one host's HBM never
+    # holds the global batch.  Single host: probe_batch == args.batch.
+    from repro.parallel.sharding import per_host_batch
+
     seq = args.seq if args.reduced else 4096
+    probe_batch = per_host_batch(args.batch, mesh, cfg)
+    if probe_batch != args.batch:
+        log.info("multi-host fleet: memory certificates compile at the "
+                 "per-host batch share %d (global %d)", probe_batch, args.batch)
     plan = None
     if args.plan and not args.tune:
         from repro.core.clipping import discover_meta
         from repro.tuner import ClipPlan
 
-        probe = synthetic_arch_batch(cfg, batch=args.batch, seq=seq)
-        try:
-            plan = ClipPlan.load(args.plan)
-        except (ValueError, KeyError) as e:
-            # e.g. a pre-three-way (v1) artifact: unreadable == stale
-            log.warning("unreadable ClipPlan %s (%s); falling back to the "
-                        "analytic decision", args.plan, e)
-            plan = None
+        probe = synthetic_arch_batch(cfg, batch=probe_batch, seq=seq)
         metas = discover_meta(model.loss_with_ctx, state["params"], probe)
-        if plan is not None and not plan.matches(metas):
-            # a stale plan must not drive anything — neither the branch
-            # overrides nor the microbatch geometry it measured elsewhere
-            log.warning("ClipPlan %s is stale for this arch/device; falling "
-                        "back to the analytic decision", args.plan)
-            plan = None
+        if args.consensus:
+            # fleet import: a stale plan on one rank means that rank would
+            # trace different branches than its peers — abort, loudly,
+            # before anything is traced.  verify_adopted is rank-local
+            # (fingerprint/ratification/hash integrity); the certify phase
+            # then cross-checks that every rank imported the SAME bytes
+            # (e.g. one host left holding yesterday's re-exported artifact)
+            from repro.tuner.consensus import certify_fleet_hash, verify_adopted
+
+            plan = ClipPlan.load(args.plan)
+            verify_adopted(plan, metas)
+            certify_fleet_hash(plan)
+        else:
+            try:
+                plan = ClipPlan.load(args.plan)
+            except (ValueError, KeyError) as e:
+                # e.g. a pre-three-way (v1) artifact: unreadable == stale
+                log.warning("unreadable ClipPlan %s (%s); falling back to the "
+                            "analytic decision", args.plan, e)
+                plan = None
+            if plan is not None and not plan.matches(metas):
+                # a stale plan must not drive anything — neither the branch
+                # overrides nor the microbatch geometry it measured elsewhere
+                log.warning("ClipPlan %s is stale for this arch/device; "
+                            "falling back to the analytic decision", args.plan)
+                plan = None
         if plan is not None:
             engine.use_plan(plan)
-            log.info("loaded ClipPlan %s (device %s, %d branch overrides)",
-                     args.plan, plan.device, len(plan.branches))
+            log.info("loaded ClipPlan %s (device %s, %d branch overrides%s)",
+                     args.plan, plan.device, len(plan.branches),
+                     f", agreed by {plan.agreed_ranks} rank(s)"
+                     if plan.agreed_ranks else "")
     elif args.tune:
-        probe = synthetic_arch_batch(cfg, batch=args.batch, seq=seq)
+        probe = synthetic_arch_batch(cfg, batch=probe_batch, seq=seq)
         plan = engine.tune(
             state["params"], probe, arch=cfg.name,
             budget_bytes=int(args.tune_budget_gb * 1024**3),
             hi_cap=args.tune_hi_cap,
             plan_path=args.plan if args.plan else "auto",
+            consensus=args.consensus,
         )
         log.info("tuned %d taps; max physical batch=%s", len(plan.branches),
                  plan.physical_batch)
@@ -181,6 +219,32 @@ def run_once(args) -> int:
                     replan = candidate.recertify_max_batch(
                         state["params"], probe, hi_cap=args.tune_hi_cap
                     )
+                    if args.consensus:
+                        # the re-certification compiled on THIS rank's kind;
+                        # the fleet adopts the mode only if every rank fits
+                        # it, at the minimum batch any rank certified
+                        from repro.tuner.consensus import (
+                            reconcile_recertification,
+                        )
+
+                        fits, fleet_mb = reconcile_recertification(
+                            replan is not None,
+                            replan.physical_batch if replan is not None
+                            else None,
+                        )
+                        if not fits:
+                            replan = None
+                        elif fleet_mb and fleet_mb != replan.physical_batch:
+                            log.info("fleet minimum re-certified batch %d "
+                                     "(this rank fit %d)", fleet_mb,
+                                     replan.physical_batch)
+                            replan = replan.replace_batch(
+                                physical_batch=fleet_mb,
+                                logical_batch=replan.logical_batch,
+                                accumulation_steps=None,
+                                budget_bytes=replan.budget_bytes,
+                            )
+                            candidate.use_plan(replan)
                     if replan is None:
                         log.warning(
                             "no batch fits the budget under %s; staying on "
@@ -198,7 +262,14 @@ def run_once(args) -> int:
     if plan is not None and plan.physical_batch:
         from repro.tuner import derive_accumulation
 
-        physical, accum = derive_accumulation(args.batch, plan.physical_batch)
+        # plan.physical_batch certifies ONE host's capacity (the probe was
+        # sliced to the per-host share above); the cap on the *global*
+        # microbatch scales back by the same factor — on a single host the
+        # scale is 1 and this is the PR-2 behaviour unchanged
+        host_scale = max(1, args.batch // probe_batch)
+        physical, accum = derive_accumulation(
+            args.batch, plan.physical_batch * host_scale
+        )
     logical_eff = physical * accum
     if accum > 1:
         log.info(
@@ -215,6 +286,20 @@ def run_once(args) -> int:
         engine = make_engine(logical_eff, clip_mode)
         if plan is not None:
             engine.use_plan(plan)
+
+    if args.consensus:
+        # decisions derived rank-locally AFTER plan adoption — the --mode
+        # auto re-certification (which can fall back per rank when nothing
+        # fits) and the accumulation split — must also agree fleet-wide, or
+        # ranks would trace different modes/microstep counts past the plan
+        # consensus gate
+        from repro.tuner.consensus import certify_fleet_value
+
+        certify_fleet_value(
+            "adopted mode/batch",
+            f"{clip_mode}:{physical}:{accum}:"
+            f"{plan.consensus_hash() if plan is not None else '-'}",
+        )
 
     dp = DPTrainConfig(
         clipping_mode=clip_mode,

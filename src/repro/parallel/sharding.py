@@ -53,6 +53,34 @@ def axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
     return out
 
 
+def per_host_batch(global_batch: int, mesh: Mesh, cfg: Optional[ArchConfig] = None) -> int:
+    """The largest slice of ``global_batch`` any single host materializes.
+
+    Batch dims shard over the mesh's data axes, which span every host; a
+    host therefore holds ``global_batch / hosts`` samples (rounded up when
+    uneven — certify the worst host, and when the batch does not shard at
+    all, the whole thing).  Memory certificates MUST be compiled at this
+    size: the tuner's max-batch search and ``PrivacyEngine
+    .recertify_max_batch`` size HBM, and compiling them at the global batch
+    on a multi-host fleet would reject physical batches that fit every
+    host comfortably (or, with a budget per host, certify ones that don't).
+    """
+    from repro.launch.mesh import mesh_host_count
+
+    hosts = mesh_host_count(mesh)
+    if hosts <= 1:
+        return global_batch
+    # replicated batch (no divisible data axis): every host holds it whole
+    nb = axis_size(mesh, mesh_axes(mesh, cfg)["batch"])
+    if nb <= 1 or global_batch % nb != 0:
+        return global_batch
+    # a host can hold at most min(hosts, nb) distinct batch shards: when a
+    # model axis also spans hosts, the batch shards fewer ways than there
+    # are hosts and each host materializes the LARGER slice — dividing by
+    # raw host count here would under-certify memory
+    return -(-global_batch // min(hosts, nb))
+
+
 def logical_rules(mesh: Mesh, cfg: Optional[ArchConfig] = None) -> dict[str, tuple]:
     ax = mesh_axes(mesh, cfg)
     model = ax["model"]

@@ -2,10 +2,21 @@
 
 Replaces the analytic Eq-(4.1) rule with per-tap microbenchmarks on the
 actual device, caches the result as a ``ClipPlan`` (plan.py), and
-binary-searches the true max physical microbatch (max_batch.py).  Consumed
-by ``ClipConfig(plan=...)`` / ``PrivacyEngine.tune`` / ``launch.train
---tune``.
+binary-searches the true max physical microbatch (max_batch.py).  On
+multi-host fleets, consensus.py turns the per-rank measurement into one
+byte-identical fleet-adopted plan (GSPMD requires every rank to trace the
+same branch per tap).  Consumed by ``ClipConfig(plan=...)`` /
+``PrivacyEngine.tune`` / ``launch.train --tune [--consensus]``.
 """
+from repro.tuner.consensus import (
+    PlanConsensusError,
+    RankReport,
+    agree,
+    elect_leaders,
+    fleet_agree,
+    fleet_roles,
+    verify_adopted,
+)
 from repro.tuner.max_batch import (
     derive_accumulation,
     find_max_physical_batch,
@@ -31,6 +42,13 @@ from repro.tuner.plan import (
 __all__ = [
     "ClipPlan",
     "TapTiming",
+    "PlanConsensusError",
+    "RankReport",
+    "agree",
+    "elect_leaders",
+    "fleet_agree",
+    "fleet_roles",
+    "verify_adopted",
     "MeasureConfig",
     "build_plan",
     "close_physical_batch_loop",

@@ -11,6 +11,17 @@ physical batch, and write the plan JSON (cache path or --plan).  The printed
 table shows where the measured winner disagrees with the analytic Eq-(4.1)
 rule — the entire reason this subsystem exists — and which tuned mode
 (mixed_ghost vs bk_mixed) the measurements recommend.
+
+Fleet workflows (repro.tuner.consensus):
+
+- ``--consensus``: run the multi-host agreement after measuring — one
+  leader per device kind measures, every rank adopts the byte-identical
+  agreed plan (single process: stamps consensus provenance on the plan).
+- ``--export-plan out.json``: write the adopted plan for offline fleets
+  whose ranks cannot gather at tune time.
+- ``--import-plan in.json``: skip measuring; load + strictly verify a plan
+  against this host's model/device (exit non-zero on any mismatch — a
+  fleet rank must never silently fall back to the analytic rule).
 """
 from __future__ import annotations
 
@@ -59,6 +70,15 @@ def parse_args(argv=None):
                     help="do not re-time branches at the tuned physical batch")
     ap.add_argument("--mode", default="mixed_ghost",
                     help="clipping mode the max-batch search compiles")
+    ap.add_argument("--consensus", action="store_true",
+                    help="fleet agreement after measuring: adopt the "
+                         "byte-identical plan on every rank")
+    ap.add_argument("--export-plan", default=None,
+                    help="also write the adopted plan here (offline fleets)")
+    ap.add_argument("--import-plan", default=None,
+                    help="skip measuring: load + strictly verify this plan "
+                         "against the local model/device (non-zero exit on "
+                         "mismatch)")
     return ap.parse_args(argv)
 
 
@@ -75,6 +95,43 @@ def main(argv=None) -> int:
     log.info("discovered %d taps (%d matmul) on %s", len(metas),
              sum(1 for m in metas.values() if m.kind == "matmul"),
              jax.devices()[0].device_kind)
+
+    if args.import_plan:
+        # offline-fleet rank: adopt a plan exported elsewhere, or die loudly
+        from repro.tuner.consensus import PlanConsensusError, verify_adopted
+        from repro.tuner.plan import ClipPlan
+
+        try:
+            plan = ClipPlan.load(args.import_plan)
+            verify_adopted(plan, metas)
+        except (PlanConsensusError, ValueError, OSError) as e:
+            log.error("cannot adopt %s: %s", args.import_plan, e)
+            return 1
+        for out in {args.plan, args.export_plan} - {None}:
+            plan.save(out)  # re-export the canonicalized (v3) artifact
+        print(f"adopted ClipPlan {args.import_plan} for {cfg.name} on "
+              f"{plan.device} (hash {plan.consensus_hash()}"
+              f"{f', agreed by {plan.agreed_ranks} rank(s)' if plan.agreed_ranks else ''})")
+        print(f"recommended mode: {plan.recommended_mode()}  "
+              f"max physical batch: {plan.physical_batch}")
+        return 0
+
+    if args.consensus:
+        # one measurement per device kind: a non-leader rank measures
+        # nothing and adopts the fleet plan (measuring anyway would submit
+        # a noise-divergent duplicate the agreement rightly rejects)
+        from repro.tuner.consensus import fleet_agree, fleet_roles
+
+        roles = fleet_roles()
+        if not roles.is_leader:
+            plan = fleet_agree(None, metas)
+            plan.save(args.plan or default_plan_path(cfg.name, plan.fingerprint))
+            if args.export_plan:
+                plan.save(args.export_plan)
+            print(f"process {roles.process_index} ({roles.device}): adopted "
+                  f"the fleet plan measured by process {plan.leader_process} "
+                  f"(hash {plan.agreed_hash}, {plan.agreed_ranks} ranks)")
+            return 0
 
     measure = MeasureConfig(
         repeats=args.repeats, warmup=args.warmup,
@@ -123,8 +180,15 @@ def main(argv=None) -> int:
                     plan, metas, _search, logical, budget, measure
                 )
 
+    if args.consensus:
+        from repro.tuner.consensus import fleet_agree
+
+        plan = fleet_agree(plan, metas)
+
     path = args.plan or default_plan_path(cfg.name, plan.fingerprint)
     plan.save(path)
+    if args.export_plan:
+        plan.save(args.export_plan)
 
     branch_map = plan.branch_map()
     bk_map = plan.branch_map("bk_mixed")
@@ -156,6 +220,9 @@ def main(argv=None) -> int:
         print(f"max physical batch: {plan.physical_batch} "
               f"(logical {plan.logical_batch} = "
               f"{plan.accumulation_steps} microsteps){at}")
+    if plan.agreed_ranks:
+        print(f"fleet agreement: {plan.agreed_ranks} rank(s) on "
+              f"{list(plan.devices)}, hash {plan.agreed_hash}")
     return 0
 
 

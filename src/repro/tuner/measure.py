@@ -53,6 +53,15 @@ log = get_logger("tuner.measure")
 
 @dataclasses.dataclass(frozen=True)
 class MeasureConfig:
+    """Profiling knobs shared by every tuner measurement pass.
+
+    The defaults favour cheap, stable comparisons over absolute accuracy:
+    medians over ``repeats`` timed runs absorb scheduler noise, ``warmup``
+    burns compilation, and ``max_rows`` clamps the profiled row count so a
+    huge-batch model can be tuned without OOMing the device being sized
+    (timings scale ~linearly in rows, so the *comparison* survives).
+    """
+
     repeats: int = 5  # timed iterations; the median is kept
     warmup: int = 2  # discarded iterations (compile + caches)
     ghost_block: int = 512
@@ -66,7 +75,12 @@ class MeasureConfig:
 
 
 def time_us(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
-    """Median wall microseconds per call (blocks on outputs)."""
+    """Median wall-clock microseconds per ``fn(*args)`` call.
+
+    Blocks on all outputs (``jax.block_until_ready``) so asynchronous
+    dispatch cannot under-report; the first ``warmup`` calls absorb
+    compilation and cache effects and are discarded.
+    """
     for _ in range(max(warmup, 1)):
         jax.block_until_ready(fn(*args))
     samples = []
@@ -86,7 +100,14 @@ def _tap_rows(meta: TapMeta, max_rows: Optional[int]) -> int:
 
 
 def measure_tap(meta: TapMeta, cfg: MeasureConfig = MeasureConfig()) -> Optional[TapTiming]:
-    """Time every branch for one matmul tap; None for forced-branch kinds."""
+    """Time every branch of the three-way decision for one matmul tap.
+
+    Returns a ``TapTiming`` with the five per-tap costs (ghost norm,
+    instantiated norm, both book-keeping pipelines, and the tap's share of
+    a second backward) measured on synthetic data of the tap's canonical
+    shape, or ``None`` for non-matmul kinds, whose branch is forced by
+    ``decision.decide`` and never measured.
+    """
     if meta.kind != "matmul":
         return None
     n = _tap_rows(meta, cfg.max_rows)

@@ -29,6 +29,16 @@ using ``physical_batch`` must check ``matches`` first (launch/train.py
 does).  Plans round-trip through JSON and live under
 ``~/.cache/repro-tuner/`` (override with $REPRO_TUNER_CACHE or an explicit
 path).
+
+Plan v3 adds **fleet consensus provenance** (repro.tuner.consensus): a
+multi-host run must trace byte-identical branch maps on every rank or GSPMD
+deadlocks/diverges, so an agreed plan records the devices that ratified it
+(``devices`` — ``matches`` accepts any of them, not just the measuring
+device), the consensus hash all ranks certified (``agreed_hash``, computed
+by ``consensus_hash()`` over everything *except* the provenance fields so
+stamping it is idempotent), the fleet size (``agreed_ranks``) and the
+measuring leader (``leader_process``).  v2 artifacts load with empty
+provenance (single-host plans, never agreed); v1 artifacts are rejected.
 """
 from __future__ import annotations
 
@@ -46,13 +56,27 @@ from repro.utils.logging import get_logger
 
 log = get_logger("tuner.plan")
 
-PLAN_VERSION = 2
+PLAN_VERSION = 3
+# older versions from_json still understands (migrated with empty defaults
+# for the fields they predate); v1 predates the three-way branch maps and is
+# stale by construction
+COMPAT_VERSIONS = (2, PLAN_VERSION)
 BRANCHES = ("ghost", "instantiate")
 TUNED_MODES = ("mixed_ghost", "bk_mixed")
+# ClipPlan fields that record consensus *provenance* rather than measurement:
+# excluded from consensus_hash() so that stamping the agreement outcome onto
+# the plan does not change the hash being agreed on
+PROVENANCE_FIELDS = ("devices", "agreed_hash", "agreed_ranks", "leader_process")
 
 
 def device_string(device: Optional[Any] = None) -> str:
-    """Stable identity of the accelerator a plan was measured on."""
+    """Stable identity of the accelerator a plan was measured on.
+
+    ``platform:device_kind`` (e.g. ``gpu:NVIDIA A100-SXM4-40GB``,
+    ``tpu:TPU v4``) — the granularity at which branch timings transfer: two
+    hosts with the same device kind see the same kernel costs, so a fleet
+    needs one measurement per *kind*, not per rank (repro.tuner.consensus).
+    """
     d = device if device is not None else jax.devices()[0]
     return f"{d.platform}:{d.device_kind}"
 
@@ -73,6 +97,14 @@ def tap_signature(name: str, meta: TapMeta) -> dict:
 
 
 def shape_fingerprint(metas: Mapping[str, TapMeta]) -> str:
+    """Order-independent hash of every tap's shape signature (16 hex chars).
+
+    This is the plan's model identity: two models whose taps agree on every
+    (kind, T, D, p, groups, stack, dtype) tuple — batch size excluded — share
+    a fingerprint and can share a plan.  Any change to a layer's shape, a new
+    tap, or a dtype switch changes it, which is what makes stale-plan
+    rejection (``ClipPlan.matches``) sound.
+    """
     sigs = sorted(
         (tap_signature(name, m) for name, m in metas.items()),
         key=lambda s: s["name"],
@@ -100,10 +132,12 @@ class TapTiming:
 
     @property
     def winner(self) -> str:
+        """Measured norm branch for the second-backward modes (ties: ghost)."""
         return "ghost" if self.ghost_us <= self.instantiate_us else "instantiate"
 
     @property
     def bk_winner(self) -> str:
+        """Measured bank branch for ``bk_mixed`` (ties: ghost)."""
         return "ghost" if self.bk_ghost_us <= self.bk_instantiate_us else "instantiate"
 
     def mode_cost_us(self, mode: str) -> float:
@@ -113,6 +147,7 @@ class TapTiming:
         return min(self.ghost_us, self.instantiate_us) + self.second_bwd_us
 
     def as_tuple(self, name: str) -> tuple:
+        """Flatten to the (name, *timings) row stored in ``ClipPlan.timings``."""
         return (name, self.ghost_us, self.instantiate_us,
                 self.bk_ghost_us, self.bk_instantiate_us, self.second_bwd_us)
 
@@ -145,23 +180,66 @@ class ClipPlan:
     arch: Optional[str] = None
     # (name, ghost, inst, bk_ghost, bk_inst, second_bwd) microseconds
     timings: tuple[tuple[str, float, float, float, float, float], ...] = ()
+    # -- fleet consensus provenance (v3, repro.tuner.consensus) -----------
+    # device strings that ratified this plan in a fleet agreement; matches()
+    # accepts any of them (a mixed-kind fleet must trace ONE branch map, so
+    # the agreed plan is deliberately consumable on every ratifying kind)
+    devices: tuple[str, ...] = ()
+    # consensus_hash() at agreement time, certified identical on all ranks
+    agreed_hash: Optional[str] = None
+    # fleet size at agreement time (None = never agreed / single-host plan)
+    agreed_ranks: Optional[int] = None
+    # jax.process_index of the rank whose measurement won the agreement
+    leader_process: Optional[int] = None
     version: int = PLAN_VERSION
 
     # -- consumption -----------------------------------------------------
     def branch_map(self, mode: str = "mixed_ghost") -> dict[str, str]:
+        """The per-tap branch decisions as a dict; ``mode`` picks which map."""
         return dict(self.bk_branches if mode == "bk_mixed" else self.branches)
+
+    @property
+    def device_kind(self) -> str:
+        """The accelerator kind (``device_string`` minus the platform prefix)."""
+        return self.device.split(":", 1)[-1]
+
+    def ratified_on(self, device: str) -> bool:
+        """True when ``device`` measured this plan or agreed to adopt it."""
+        return device == self.device or device in self.devices
+
+    def consensus_bytes(self) -> bytes:
+        """Canonical serialization for fleet agreement (provenance excluded).
+
+        Two plans with identical measurements produce identical bytes
+        regardless of who stamps which agreement fields onto them — the
+        property the consensus hash certification rests on.
+        """
+        d = dataclasses.asdict(self)
+        for f in PROVENANCE_FIELDS:
+            d.pop(f, None)
+        d["branches"] = [list(b) for b in self.branches]
+        d["bk_branches"] = [list(b) for b in self.bk_branches]
+        d["timings"] = [list(t) for t in self.timings]
+        return json.dumps(d, sort_keys=True, separators=(",", ":")).encode()
+
+    def consensus_hash(self) -> str:
+        """16-hex-char hash of ``consensus_bytes()`` — the fleet handshake."""
+        return hashlib.sha256(self.consensus_bytes()).hexdigest()[:16]
 
     def matches(
         self, metas: Mapping[str, TapMeta], device: Optional[Any] = None
     ) -> bool:
-        """True when this plan was measured on this device for these taps.
+        """True when this plan is valid on this device for these taps.
 
         Gate *every* plan consumption on this — branch overrides AND the
         tuned physical batch: a plan tuned on different hardware describes a
         different memory budget just as much as different branch costs.
+        Valid means measured on this device OR ratified by it in a fleet
+        agreement (``devices``): a mixed-kind fleet must trace one branch
+        map everywhere, so adoption extends validity by construction.
         """
         return (
-            self.device == device_string(device)
+            self.ratified_on(device_string(device))
             and self.fingerprint == shape_fingerprint(metas)
         )
 
@@ -180,10 +258,11 @@ class ClipPlan:
         backward, so its measured winners are stored separately.
         """
         dev = device_string(device)
-        if self.device != dev:
+        if not self.ratified_on(dev):
             log.warning(
-                "ClipPlan measured on %s but running on %s; "
-                "falling back to the analytic decision", self.device, dev,
+                "ClipPlan measured on %s (ratified by %s) but running on %s; "
+                "falling back to the analytic decision",
+                self.device, list(self.devices) or "no fleet", dev,
             )
             return {}
         fp = shape_fingerprint(metas)
@@ -198,6 +277,7 @@ class ClipPlan:
         return {name: b for name, b in branches if name in metas}
 
     def tap_timings(self) -> dict[str, TapTiming]:
+        """The stored timing rows re-hydrated as ``TapTiming`` per tap."""
         return {
             name: TapTiming(g, i, bg, bi, sb)
             for name, g, i, bg, bi, sb in self.timings
@@ -228,6 +308,7 @@ class ClipPlan:
         accumulation_steps: Optional[int] = None,
         budget_bytes: Optional[int] = None,
     ) -> "ClipPlan":
+        """Copy with a new batch certificate (branch maps/timings untouched)."""
         return dataclasses.replace(
             self,
             physical_batch=physical_batch,
@@ -238,17 +319,31 @@ class ClipPlan:
 
     # -- serialization ---------------------------------------------------
     def to_json(self) -> str:
+        """The on-disk artifact: deterministic, human-inspectable JSON.
+
+        Keys are sorted and tuples listified, so two ``ClipPlan`` objects
+        that compare equal serialize byte-identically — the property fleet
+        consensus certifies across ranks.
+        """
         d = dataclasses.asdict(self)
         d["branches"] = [list(b) for b in self.branches]
         d["bk_branches"] = [list(b) for b in self.bk_branches]
         d["timings"] = [list(t) for t in self.timings]
+        d["devices"] = list(self.devices)
         return json.dumps(d, indent=2, sort_keys=True)
 
     @classmethod
     def from_json(cls, text: str) -> "ClipPlan":
+        """Parse and validate a plan artifact; raises ``ValueError`` when stale.
+
+        v3 is current; v2 (pre-consensus) migrates with empty provenance —
+        its measurements are still sound on the device that took them.  v1
+        (pre-three-way) and unknown versions are rejected: their branch maps
+        know nothing about the bk bank decision.
+        """
         d = json.loads(text)
         version = int(d.get("version", 0))
-        if version != PLAN_VERSION:
+        if version not in COMPAT_VERSIONS:
             raise ValueError(f"unsupported ClipPlan version {version}")
         branches = tuple((str(n), str(b)) for n, b in d.get("branches", ()))
         bk_branches = tuple((str(n), str(b)) for n, b in d.get("bk_branches", ()))
@@ -270,10 +365,15 @@ class ClipPlan:
                 (str(n), float(g), float(i), float(bg), float(bi), float(sb))
                 for n, g, i, bg, bi, sb in d.get("timings", ())
             ),
-            version=version,
+            devices=tuple(str(x) for x in d.get("devices", ())),
+            agreed_hash=d.get("agreed_hash"),
+            agreed_ranks=d.get("agreed_ranks"),
+            leader_process=d.get("leader_process"),
+            version=PLAN_VERSION,
         )
 
     def save(self, path: str) -> str:
+        """Write the JSON artifact (parent dirs created); returns ``path``."""
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         with open(path, "w") as f:
             f.write(self.to_json() + "\n")
@@ -281,11 +381,13 @@ class ClipPlan:
 
     @classmethod
     def load(cls, path: str) -> "ClipPlan":
+        """Read + validate a plan artifact (see ``from_json`` for staleness)."""
         with open(path) as f:
             return cls.from_json(f.read())
 
 
 def cache_dir() -> str:
+    """Plan cache root: ``$REPRO_TUNER_CACHE`` or ``~/.cache/repro-tuner``."""
     return os.environ.get(
         "REPRO_TUNER_CACHE",
         os.path.join(os.path.expanduser("~"), ".cache", "repro-tuner"),
@@ -293,6 +395,7 @@ def cache_dir() -> str:
 
 
 def default_plan_path(arch: Optional[str], fingerprint: str) -> str:
+    """Cache path for an (arch, shape-fingerprint) pair's plan artifact."""
     stem = f"{arch or 'model'}-{fingerprint}"
     return os.path.join(cache_dir(), f"{stem}.json")
 

@@ -1,0 +1,593 @@
+"""repro.tuner.consensus: multi-host plan agreement, simulated with fakes.
+
+No ``jax.distributed`` anywhere: fleets are lists of ``RankReport``s and the
+gather primitive is a closure over them, which is exactly the injection
+surface the production path uses.  Covers the acceptance gates of the
+consensus subsystem: a simulated 2-process tune adopts byte-identical
+``ClipPlan``s on every rank; mismatched plans/fingerprints are rejected
+loudly before anything could be traced; the mixed-device-kind tie-break is
+deterministic; v2 artifacts migrate; strict imports fail on staleness.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.clipping import ClipConfig, discover_meta, dp_value_and_clipped_grad
+from repro.core.engine import PrivacyEngine
+from repro.nn.module import Dense
+from repro.core.taps import Ctx
+from repro.tuner import MeasureConfig, build_plan
+from repro.tuner.consensus import (
+    PlanConsensusError,
+    RankReport,
+    agree,
+    certify_fleet_hash,
+    elect_leaders,
+    fleet_agree,
+    fleet_roles,
+    plan_step_cost_us,
+    verify_adopted,
+)
+from repro.tuner.plan import ClipPlan, device_string, shape_fingerprint
+
+from helpers import max_tree_diff
+
+
+# ------------------------------------------------------------- tiny model --
+class TwoLayer:
+    def __init__(self):
+        self.f1 = Dense("f1", 12, 8)
+        self.f2 = Dense("f2", 8, 4)
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"f1": self.f1.init(k1), "f2": self.f2.init(k2)}
+
+    def loss_with_ctx(self, params, batch, ctx: Ctx):
+        h = jax.nn.relu(self.f1(params["f1"], batch["x"], ctx.scope("f1")))
+        out = self.f2(params["f2"], h, ctx.scope("f2"))
+        return jnp.mean((out - batch["y"]) ** 2, axis=(1, 2))
+
+
+def _setup():
+    model = TwoLayer()
+    params = model.init(jax.random.PRNGKey(0))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    batch = {
+        "x": jax.random.normal(k1, (4, 6, 12)),
+        "y": jax.random.normal(k2, (4, 6, 4)),
+    }
+    metas = discover_meta(model.loss_with_ctx, params, batch)
+    return model, params, batch, metas
+
+
+def _measured_plan(metas, **replace):
+    plan = build_plan(metas, measure=MeasureConfig(repeats=1, warmup=1),
+                      arch="twolayer")
+    return dataclasses.replace(plan, **replace) if replace else plan
+
+
+def _plan_with_timings(metas, device, scale=1.0):
+    """A deterministic synthetic plan (no wall-clock measurement noise)."""
+    names = sorted(n for n, m in metas.items() if m.kind == "matmul")
+    return ClipPlan(
+        fingerprint=shape_fingerprint(metas),
+        device=device,
+        branches=tuple((n, "ghost") for n in names),
+        bk_branches=tuple((n, "instantiate") for n in names),
+        timings=tuple(
+            (n, 10.0 * scale, 20.0 * scale, 5.0 * scale, 4.0 * scale,
+             30.0 * scale)
+            for n in names
+        ),
+        arch="twolayer",
+    )
+
+
+class FakeFleet:
+    """A gather_fn factory simulating N ranks without any distributed jax.
+
+    Phase payloads are recorded per rank; ``gather_for(i)`` returns a
+    gather_fn that hands rank i the union of every rank's payload for that
+    phase — the same multiset on every rank, like a real all-gather.  The
+    fleet must be *driven* rank-by-rank per phase, so tests pre-register
+    the peers' payloads by constructing the same reports the driver would.
+    """
+
+    def __init__(self, phases: dict):
+        self.phases = phases
+
+    def gather_for(self, rank):
+        def gather(payload):
+            got = self.phases[payload["phase"]]
+            assert any(
+                p["process_index"] == payload["process_index"] for p in got
+            ), "a rank must be part of the gather it participates in"
+            return got
+        return gather
+
+
+def _fleet_for(reports, adopted_hash=None):
+    phases = {
+        "roles": [
+            {"phase": "roles", "process_index": r.process_index,
+             "device": r.device}
+            for r in reports
+        ],
+        "agree": [dict(r.to_payload(), phase="agree") for r in reports],
+    }
+    if adopted_hash is None:
+        adopted_hash = agree(reports).consensus_hash()
+    phases["certify"] = [
+        {"phase": "certify", "process_index": r.process_index,
+         "hash": adopted_hash}
+        for r in reports
+    ]
+    return FakeFleet(phases)
+
+
+# -------------------------------------------------------- leader election --
+def test_elect_leaders_lowest_rank_per_kind():
+    devices = {3: "tpu:TPU v4", 1: "gpu:A100", 2: "tpu:TPU v4", 0: "gpu:A100"}
+    assert elect_leaders(devices) == {"gpu:A100": 0, "tpu:TPU v4": 2}
+
+
+def test_fleet_roles_single_process_is_leader():
+    roles = fleet_roles()  # default gather: this one process
+    assert roles.is_leader
+    assert roles.n_ranks == 1
+    assert roles.device == device_string()
+
+
+def test_fleet_roles_non_leader_rank():
+    fleet = _fleet_for([
+        RankReport(0, "tpu:TPU v4", "f" * 16),
+        RankReport(1, "tpu:TPU v4", "f" * 16),
+    ], adopted_hash="x")
+    r1 = fleet_roles(gather_fn=fleet.gather_for(1), process_index=1,
+                     device="tpu:TPU v4")
+    assert not r1.is_leader
+    assert r1.leaders == (("tpu:TPU v4", 0),)
+    r0 = fleet_roles(gather_fn=fleet.gather_for(0), process_index=0,
+                     device="tpu:TPU v4")
+    assert r0.is_leader
+
+
+# ------------------------------------------- 2-process byte-identical tune --
+def test_two_process_tune_adopts_byte_identical_plans():
+    """The acceptance gate: every rank of a simulated 2-process fleet ends
+    holding the same bytes, certified by the hash phase."""
+    _, _, _, metas = _setup()
+    fp = shape_fingerprint(metas)
+    dev = device_string()
+    leader_plan = _measured_plan(metas)
+    reports = [
+        RankReport(0, dev, fp, leader_plan.to_json(),
+                   plan_step_cost_us(leader_plan)),
+        RankReport(1, dev, fp, None, None),  # non-leader measured nothing
+    ]
+    fleet = _fleet_for(reports)
+    a0 = fleet_agree(leader_plan, metas, gather_fn=fleet.gather_for(0),
+                     process_index=0, device=dev)
+    a1 = fleet_agree(None, metas, gather_fn=fleet.gather_for(1),
+                     process_index=1, device=dev)
+    assert a0.to_json() == a1.to_json()
+    assert a0.agreed_ranks == 2
+    assert a0.leader_process == 0
+    assert a0.agreed_hash == a0.consensus_hash()
+    assert a0.devices == (dev,)
+    # report order must not matter: gathers are unordered on real fleets
+    fleet_rev = _fleet_for(list(reversed(reports)))
+    a0r = fleet_agree(leader_plan, metas, gather_fn=fleet_rev.gather_for(0),
+                      process_index=0, device=dev)
+    assert a0r.to_json() == a0.to_json()
+
+
+def test_engine_tune_consensus_single_process(tmp_path, monkeypatch):
+    """tune(consensus=True) on one process stamps provenance and stays
+    consumable: the adopted plan drives the same math as the analytic rule."""
+    monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path))
+    model, params, batch, metas = _setup()
+    eng = PrivacyEngine(
+        loss_with_ctx=model.loss_with_ctx, batch_size=4, sample_size=1000,
+        steps=10, max_grad_norm=1.0, noise_multiplier=1.0,
+    )
+    plan = eng.tune(params, batch, arch="twolayer", plan_path=None,
+                    use_cache=False, search_max_batch=False,
+                    measure=MeasureConfig(repeats=1, warmup=1),
+                    consensus=True)
+    assert plan.agreed_ranks == 1
+    assert plan.leader_process == jax.process_index()
+    assert plan.devices == (device_string(),)
+    verify_adopted(plan, metas)  # must not raise
+    f_analytic = dp_value_and_clipped_grad(model.loss_with_ctx, ClipConfig())
+    f_plan = dp_value_and_clipped_grad(
+        model.loss_with_ctx, ClipConfig(plan=plan)
+    )
+    _, g1, _ = f_analytic(params, batch)
+    _, g2, _ = f_plan(params, batch)
+    assert max_tree_diff(g1, g2) < 1e-5
+
+
+def test_engine_tune_consensus_non_leader_adopts_without_measuring(
+    tmp_path, monkeypatch
+):
+    """A non-leader rank must skip profiling entirely and still adopt."""
+    monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path))
+    model, params, batch, metas = _setup()
+    fp = shape_fingerprint(metas)
+    dev = device_string()
+    leader_plan = _measured_plan(metas)
+    reports = [
+        RankReport(0, dev, fp, leader_plan.to_json(),
+                   plan_step_cost_us(leader_plan)),
+        RankReport(1, dev, fp, None, None),
+    ]
+    fleet = _fleet_for(reports)
+    monkeypatch.setattr(jax, "process_index", lambda: 1)
+
+    def boom(*a, **k):
+        raise AssertionError("non-leader rank must not measure")
+
+    import repro.tuner.measure as measure_mod
+    monkeypatch.setattr(measure_mod, "measure_tap", boom)
+
+    eng = PrivacyEngine(
+        loss_with_ctx=model.loss_with_ctx, batch_size=4, sample_size=1000,
+        steps=10, max_grad_norm=1.0, noise_multiplier=1.0,
+    )
+    plan = eng.tune(params, batch, arch="twolayer", plan_path=None,
+                    use_cache=False, search_max_batch=False,
+                    consensus=True, gather_fn=fleet.gather_for(1))
+    assert plan.agreed_ranks == 2
+    assert plan.branch_map() == leader_plan.branch_map()
+    assert eng.plan == plan
+
+
+# ------------------------------------------------------ mismatch rejection --
+def test_same_kind_different_plans_rejected():
+    _, _, _, metas = _setup()
+    fp = shape_fingerprint(metas)
+    p0 = _plan_with_timings(metas, "tpu:TPU v4")
+    p1 = dataclasses.replace(
+        p0, branches=tuple((n, "instantiate") for n, _ in p0.branches)
+    )
+    reports = [
+        RankReport(0, "tpu:TPU v4", fp, p0.to_json(), 10.0),
+        RankReport(1, "tpu:TPU v4", fp, p1.to_json(), 10.0),
+    ]
+    with pytest.raises(PlanConsensusError, match="different plans"):
+        agree(reports)
+
+
+def test_fingerprint_mismatch_rejected_loudly():
+    _, _, _, metas = _setup()
+    fp = shape_fingerprint(metas)
+    p0 = _plan_with_timings(metas, "tpu:TPU v4")
+    reports = [
+        RankReport(0, "tpu:TPU v4", fp, p0.to_json(), 10.0),
+        RankReport(1, "tpu:TPU v4", "deadbeef" * 2, None, None),
+    ]
+    with pytest.raises(PlanConsensusError, match="not running the same model"):
+        agree(reports)
+
+
+def test_kind_without_any_plan_rejected():
+    _, _, _, metas = _setup()
+    fp = shape_fingerprint(metas)
+    p0 = _plan_with_timings(metas, "tpu:TPU v4")
+    reports = [
+        RankReport(0, "tpu:TPU v4", fp, p0.to_json(), 10.0),
+        RankReport(1, "gpu:A100", fp, None, None),
+    ]
+    with pytest.raises(PlanConsensusError, match="no measured plan"):
+        agree(reports)
+
+
+def test_certify_rejects_diverged_hashes():
+    _, _, _, metas = _setup()
+    plan = _plan_with_timings(metas, device_string())
+    fleet = FakeFleet({
+        "certify": [
+            {"phase": "certify", "process_index": 0,
+             "hash": plan.consensus_hash()},
+            {"phase": "certify", "process_index": 1, "hash": "divergent"},
+        ]
+    })
+    with pytest.raises(PlanConsensusError, match="refusing to trace"):
+        certify_fleet_hash(plan, gather_fn=fleet.gather_for(0),
+                           process_index=0)
+
+
+def test_certify_fleet_value_gates_post_adoption_divergence():
+    """The --mode auto re-certification can fall back per rank; a rank whose
+    verdict differs from its peers must abort before tracing."""
+    from repro.tuner.consensus import certify_fleet_value
+
+    fleet = FakeFleet({
+        "certify:adopted mode/batch": [
+            {"phase": "certify:adopted mode/batch", "process_index": 0,
+             "value": "bk_mixed:64:4:abc"},
+            {"phase": "certify:adopted mode/batch", "process_index": 1,
+             "value": "mixed_ghost:64:4:abc"},  # rank 1 fell back
+        ]
+    })
+    with pytest.raises(PlanConsensusError, match="diverge on adopted"):
+        certify_fleet_value("adopted mode/batch", "bk_mixed:64:4:abc",
+                            gather_fn=fleet.gather_for(0), process_index=0)
+    # unanimity passes (single-process default gather is the trivial case)
+    certify_fleet_value("adopted mode/batch", "anything")
+
+
+def test_engine_consensus_cache_hit_rejects_foreign_kind_measurement(
+    tmp_path, monkeypatch
+):
+    """A cached plan this kind only RATIFIED (measured by another kind in an
+    earlier mixed fleet) must not be resubmitted as this kind's measurement:
+    the engine re-measures instead of letting the kind dodge profiling."""
+    monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path))
+    model, params, batch, metas = _setup()
+    from repro.tuner.plan import default_plan_path
+
+    foreign = dataclasses.replace(
+        _plan_with_timings(metas, "tpu:TPU v9000"),
+        devices=("tpu:TPU v9000", device_string()),  # ratified locally
+        agreed_ranks=2, leader_process=0, arch="twolayer",
+    )
+    foreign = dataclasses.replace(foreign, agreed_hash=foreign.consensus_hash())
+    foreign.save(default_plan_path("twolayer", foreign.fingerprint))
+    assert foreign.matches(metas)  # the ratification makes it a cache hit
+
+    eng = PrivacyEngine(
+        loss_with_ctx=model.loss_with_ctx, batch_size=4, sample_size=1000,
+        steps=10, max_grad_norm=1.0, noise_multiplier=1.0,
+    )
+    plan = eng.tune(params, batch, arch="twolayer", search_max_batch=False,
+                    measure=MeasureConfig(repeats=1, warmup=1),
+                    consensus=True)
+    # a fresh local measurement won the (single-kind) agreement, and the
+    # adopted plan was persisted over the foreign cache entry
+    assert plan.device == device_string()
+    assert plan.leader_process == jax.process_index()
+    cached = ClipPlan.load(default_plan_path("twolayer", plan.fingerprint))
+    assert cached.device == device_string()
+
+
+def test_reconcile_recertification_unanimity_and_min():
+    """--mode auto's per-rank re-certification reduces fleet-wide: the mode
+    is adopted only when every rank fits it, at the minimum batch."""
+    from repro.tuner.consensus import reconcile_recertification
+
+    def fleet(entries):
+        return FakeFleet({"recertify": [
+            {"phase": "recertify", "process_index": i,
+             "mode_ok": ok, "physical_batch": b}
+            for i, (ok, b) in enumerate(entries)
+        ]})
+
+    # mixed kinds fit different batches: the minimum wins everywhere
+    f = fleet([(True, 128), (True, 32)])
+    assert reconcile_recertification(
+        True, 128, gather_fn=f.gather_for(0), process_index=0
+    ) == (True, 32)
+    # one rank cannot fit the recommended mode: nobody adopts it
+    f = fleet([(True, 128), (False, None)])
+    ok, _ = reconcile_recertification(
+        True, 128, gather_fn=f.gather_for(0), process_index=0
+    )
+    assert not ok
+    # single process: the identity
+    assert reconcile_recertification(True, 64) == (True, 64)
+
+
+def test_agree_rejects_empty_and_duplicate_ranks():
+    _, _, _, metas = _setup()
+    fp = shape_fingerprint(metas)
+    p = _plan_with_timings(metas, "tpu:TPU v4")
+    with pytest.raises(PlanConsensusError):
+        agree([])
+    with pytest.raises(PlanConsensusError, match="duplicate process"):
+        agree([
+            RankReport(0, "tpu:TPU v4", fp, p.to_json(), 1.0),
+            RankReport(0, "tpu:TPU v4", fp, p.to_json(), 1.0),
+        ])
+
+
+# ------------------------------------------------------ mixed device kinds --
+def test_mixed_kinds_tie_break_is_median_of_ranks_and_deterministic():
+    _, _, _, metas = _setup()
+    fp = shape_fingerprint(metas)
+    slow = _plan_with_timings(metas, "gpu:A100", scale=10.0)
+    fast = _plan_with_timings(metas, "tpu:TPU v4", scale=1.0)
+    reports = [
+        RankReport(0, "gpu:A100", fp, slow.to_json(), plan_step_cost_us(slow)),
+        # one A100 straggler reporting an absurd cost must not flip the
+        # verdict for the tpu kind (median, not min/mean)
+        RankReport(1, "gpu:A100", fp, None, 1e9),
+        RankReport(2, "tpu:TPU v4", fp, fast.to_json(),
+                   plan_step_cost_us(fast)),
+        RankReport(3, "tpu:TPU v4", fp, None, plan_step_cost_us(fast)),
+    ]
+    adopted = agree(reports)
+    assert adopted.device == "tpu:TPU v4"
+    assert adopted.leader_process == 2
+    # every rank — including the gpu ones — ratified the one adopted plan
+    assert adopted.devices == ("gpu:A100", "tpu:TPU v4")
+    assert adopted.agreed_ranks == 4
+    # report order must not change the outcome
+    assert agree(list(reversed(reports))).to_json() == adopted.to_json()
+    # the gpu rank can consume it: ratification extends matches()
+    assert adopted.ratified_on("gpu:A100")
+    verify_adopted(adopted, metas, device="gpu:A100")  # must not raise
+
+
+def test_mixed_kinds_adopts_min_physical_batch():
+    _, _, _, metas = _setup()
+    fp = shape_fingerprint(metas)
+    fast = dataclasses.replace(
+        _plan_with_timings(metas, "tpu:TPU v4", scale=1.0),
+        physical_batch=256, budget_bytes=1 << 30, measured_at_physical=True,
+    )
+    slow = dataclasses.replace(
+        _plan_with_timings(metas, "gpu:A100", scale=10.0),
+        physical_batch=64, budget_bytes=1 << 30,
+    )
+    reports = [
+        RankReport(0, "tpu:TPU v4", fp, fast.to_json(),
+                   plan_step_cost_us(fast)),
+        RankReport(1, "gpu:A100", fp, slow.to_json(),
+                   plan_step_cost_us(slow)),
+    ]
+    adopted = agree(reports)
+    # tpu's branch maps win on time, but the weakest device bounds the
+    # fleet's uniform physical microbatch
+    assert adopted.device == "tpu:TPU v4"
+    assert adopted.physical_batch == 64
+    # the winner's timings were NOT re-measured at the lowered batch; the
+    # adopted plan must not claim they were
+    assert not adopted.measured_at_physical
+
+
+def test_uncertified_kind_drops_the_batch_certificate():
+    """A kind that never certified a batch must not inherit the winner's:
+    its HBM never compiled that graph.  The adopted plan drops the
+    certificate; each host re-certifies at its own per-host share."""
+    _, _, _, metas = _setup()
+    fp = shape_fingerprint(metas)
+    fast = dataclasses.replace(
+        _plan_with_timings(metas, "tpu:TPU v4", scale=1.0),
+        physical_batch=256, budget_bytes=1 << 30,
+    )
+    slow = _plan_with_timings(metas, "gpu:A100", scale=10.0)  # no batch cert
+    reports = [
+        RankReport(0, "tpu:TPU v4", fp, fast.to_json(),
+                   plan_step_cost_us(fast)),
+        RankReport(1, "gpu:A100", fp, slow.to_json(),
+                   plan_step_cost_us(slow)),
+    ]
+    adopted = agree(reports)
+    assert adopted.device == "tpu:TPU v4"
+    assert adopted.physical_batch is None
+    assert adopted.accumulation_steps is None
+
+
+def test_mixed_kind_cost_tie_breaks_on_device_string():
+    _, _, _, metas = _setup()
+    fp = shape_fingerprint(metas)
+    pa = _plan_with_timings(metas, "gpu:A100", scale=1.0)
+    pb = _plan_with_timings(metas, "tpu:TPU v4", scale=1.0)  # equal cost
+    reports = [
+        RankReport(0, "gpu:A100", fp, pa.to_json(), plan_step_cost_us(pa)),
+        RankReport(1, "tpu:TPU v4", fp, pb.to_json(), plan_step_cost_us(pb)),
+    ]
+    adopted = agree(reports)
+    assert adopted.device == "gpu:A100"  # lexicographic, deterministic
+
+
+# --------------------------------------------------------- strict imports --
+def test_import_mismatched_fingerprint_fails_before_tracing():
+    """The acceptance gate: a rank importing a mismatched-fingerprint plan
+    must fail loudly, not warn-and-fall-back like the single-host path."""
+    _, _, _, metas = _setup()
+    plan = _plan_with_timings(metas, device_string())
+    stale = dataclasses.replace(plan, fingerprint="deadbeef" * 2)
+    with pytest.raises(PlanConsensusError, match="different model"):
+        verify_adopted(stale, metas)
+
+
+def test_import_wrong_device_fails_unless_ratified():
+    _, _, _, metas = _setup()
+    plan = _plan_with_timings(metas, "tpu:TPU v9000")
+    with pytest.raises(PlanConsensusError, match="ratified"):
+        verify_adopted(plan, metas)
+    ratified = dataclasses.replace(
+        plan, devices=("tpu:TPU v9000", device_string())
+    )
+    verify_adopted(ratified, metas)  # must not raise
+
+
+def test_import_tampered_agreement_hash_fails():
+    _, _, _, metas = _setup()
+    plan = _plan_with_timings(metas, device_string())
+    tampered = dataclasses.replace(plan, agreed_hash="0" * 16)
+    with pytest.raises(PlanConsensusError, match="edited after"):
+        verify_adopted(tampered, metas)
+
+
+def test_train_consensus_import_raises_on_stale_plan(tmp_path):
+    """launch.train --consensus --plan <stale> must abort, not fall back."""
+    from repro.launch import train as train_mod
+
+    stale = ClipPlan(fingerprint="deadbeef" * 2, device=device_string(),
+                     arch="qwen2-72b")
+    path = str(tmp_path / "stale.json")
+    stale.save(path)
+    args = train_mod.parse_args([
+        "--arch", "qwen2-72b", "--reduced", "--steps", "1", "--batch", "2",
+        "--seq", "8", "--plan", path, "--consensus",
+    ])
+    with pytest.raises(PlanConsensusError):
+        train_mod.run_once(args)
+
+
+# ----------------------------------------------------------- v2 migration --
+def test_v2_plan_migrates_with_empty_provenance():
+    _, _, _, metas = _setup()
+    plan = _plan_with_timings(metas, device_string())
+    d = json.loads(plan.to_json())
+    d["version"] = 2
+    for f in ("devices", "agreed_hash", "agreed_ranks", "leader_process"):
+        d.pop(f, None)
+    v2 = ClipPlan.from_json(json.dumps(d))
+    assert v2.version == 3
+    assert v2.devices == () and v2.agreed_hash is None
+    assert v2.agreed_ranks is None and v2.leader_process is None
+    # measurements survive the migration byte-for-byte
+    assert v2.branches == plan.branches
+    assert v2.consensus_hash() == plan.consensus_hash()
+    # and the migrated plan can join a fleet agreement as-is
+    fp = shape_fingerprint(metas)
+    adopted = agree([RankReport(0, device_string(), fp, v2.to_json(),
+                                plan_step_cost_us(v2))])
+    assert adopted.agreed_hash == v2.consensus_hash()
+
+
+def test_provenance_stamp_is_hash_idempotent():
+    _, _, _, metas = _setup()
+    plan = _plan_with_timings(metas, device_string())
+    stamped = dataclasses.replace(
+        plan, devices=("a", "b"), agreed_hash=plan.consensus_hash(),
+        agreed_ranks=7, leader_process=3,
+    )
+    assert stamped.consensus_hash() == plan.consensus_hash()
+
+
+# ----------------------------------------------------- per-host batch math --
+def test_per_host_batch_single_host_identity():
+    from repro.launch.mesh import make_host_mesh, mesh_host_count
+    from repro.parallel.sharding import per_host_batch
+
+    mesh = make_host_mesh()
+    assert mesh_host_count(mesh) == 1
+    assert per_host_batch(256, mesh) == 256
+
+
+def test_per_host_batch_splits_across_fake_hosts(monkeypatch):
+    from repro.launch import mesh as mesh_mod
+    from repro.parallel import sharding as sh
+
+    mesh = mesh_mod.make_host_mesh()
+    monkeypatch.setattr(mesh_mod, "mesh_host_count", lambda m: 4)
+    n_data = mesh.shape["data"]
+    if 256 % n_data == 0 and n_data > 1:
+        assert sh.per_host_batch(256, mesh) == -(-256 // min(4, n_data))
+    else:
+        # batch replicates (no divisible data axis): every host holds it all
+        assert sh.per_host_batch(256, mesh) == 256
+    # model axis spanning hosts: the batch shards only nb ways, so each of
+    # the 4 hosts holds a 1/nb slice — the certificate must cover THAT
+    monkeypatch.setattr(sh, "axis_size", lambda m, axes: 2)
+    assert sh.per_host_batch(256, mesh) == 128  # min(4 hosts, 2 shards)
