@@ -1,0 +1,65 @@
+"""Policy trajectory benchmark: the cost of each clipping policy's factors.
+
+The norms machinery is shared; what differs per policy is the factor stage
+and (for grouped policies on second-backward modes) the gradient stage.
+Rows cover each policy under the fused book-keeping engine — the engine
+where every policy is one einsum schedule — plus ``per_layer`` under
+``mixed_ghost``, whose per-group pullbacks are the one genuinely more
+expensive combination (G extra backwards; see docs/ARCHITECTURE.md).
+
+``benchmarks/run.py`` writes the rows to ``BENCH_policies.json``;
+``scripts/tier1.sh`` copies it (git-SHA-stamped) into ``benchmarks/history/``
+so the policy-cost trajectory accumulates in-repo alongside the mode
+trajectory.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import SmallCNN, cnn_batch, time_fn
+
+POLICY_SPECS = (
+    ("fixed", {}),
+    ("automatic", {}),
+    ("quantile", {"release_sigma": 1.0}),
+    ("per_layer", {"groups": ("c1", "head")}),
+)
+
+
+def run(batch: int = 64, image: int = 32) -> list[tuple[str, float, str]]:
+    from repro.core.clipping import ClipConfig, dp_value_and_clipped_grad
+    from repro.policies import make_policy
+
+    model = SmallCNN()
+    params = model.init(jax.random.PRNGKey(0))
+    batch_data = cnn_batch(batch, image)
+
+    rows = []
+    baseline_us = None
+    for mode in ("bk_mixed", "mixed_ghost"):
+        for name, kw in POLICY_SPECS:
+            if mode == "mixed_ghost" and name != "per_layer":
+                continue  # only the grouped policy pays extra off-bk
+            policy = make_policy(name, clip_norm=1.0, init_clip_norm=1.0, **kw)
+            fn = jax.jit(
+                dp_value_and_clipped_grad(
+                    model.loss_with_ctx, ClipConfig(mode=mode, policy=policy)
+                )
+            )
+            pstate = policy.init_state()
+            t = time_fn(lambda f=fn, s=pstate: f(params, batch_data, s))
+            us = t * 1e6
+            if mode == "bk_mixed" and name == "fixed":
+                baseline_us = us
+            rel = us / baseline_us if baseline_us else float("nan")
+            rows.append((
+                f"policies_cnn_b{batch}_{mode}_{name}",
+                us,
+                f"policy={name};mode={mode};vs_fixed_bk={rel:.3f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -28,6 +28,7 @@ def main() -> None:
     from benchmarks import (
         fig3_memory_curve,
         modes,
+        policies,
         roofline,
         table1_complexity,
         table3_decision,
@@ -44,6 +45,7 @@ def main() -> None:
         "table7": lambda: table7_max_batch.run(),
         "fig3": lambda: fig3_memory_curve.run(fast=args.fast),
         "modes": lambda: modes.run(batch=32 if args.fast else 64),
+        "policies": lambda: policies.run(batch=32 if args.fast else 64),
         "roofline": lambda: roofline.run("single") + roofline.run("multi"),
     }
     if args.only:

@@ -9,7 +9,13 @@ the doc's own directory, whichever resolves):
 2. backtick code anchors `` `path/to/file.py:123` `` (the docs' file:line
    claim style) — the file must exist AND have at least that many lines, so
    a refactor that moves an anchored claim fails CI instead of silently
-   pointing documentation at unrelated code.
+   pointing documentation at unrelated code;
+3. symbol proximity: when an anchor is annotated with a backticked symbol
+   nearby (the docs' ``` `discover_meta` (`src/.../clipping.py:125`) ```
+   convention, in any of its orderings), at least one nearby symbol must
+   appear within +/-5 lines of the cited line — a refactor that *shifts*
+   an anchored function without moving the anchor now fails CI too,
+   instead of silently pointing at whatever code slid into that line.
 
 Exit status: 0 when every reference resolves, 1 otherwise (one line per
 broken reference).  No dependencies beyond the stdlib; runs as the tier-1
@@ -26,12 +32,54 @@ REPO = Path(__file__).resolve().parent.parent
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 # `src/repro/core/ghost.py:123` or `tests/test_tuner.py:43-58` inside backticks
 FILE_LINE = re.compile(r"`([A-Za-z0-9_./-]+\.[A-Za-z0-9]+):(\d+)(?:-(\d+))?`")
+# a backticked identifier-ish token (dotted names and trailing () allowed):
+# the symbol half of an annotated anchor
+SYMBOL = re.compile(r"`([A-Za-z_][A-Za-z0-9_.]*)(?:\(\))?`")
+# how far around an anchor to look for its symbol annotation (characters),
+# and how far around the cited line the symbol must appear (lines)
+SYMBOL_BEFORE_CHARS = 150
+SYMBOL_AFTER_CHARS = 60
+SYMBOL_LINE_WINDOW = 5
 
 
 def _line_count(path: Path, cache: dict) -> int:
+    return len(_lines(path, cache))
+
+
+def _lines(path: Path, cache: dict) -> list[str]:
     if path not in cache:
-        cache[path] = sum(1 for _ in path.open(encoding="utf-8"))
+        cache[path] = path.read_text(encoding="utf-8").splitlines()
     return cache[path]
+
+
+def _nearby_symbols(text: str, start: int, end: int) -> list[str]:
+    """Backticked identifiers around an anchor (its candidate annotations).
+
+    Path-like and line-anchor tokens are excluded; the remaining tokens are
+    the symbols the surrounding prose claims live at the cited line.
+    """
+    before = text[max(0, start - SYMBOL_BEFORE_CHARS):start]
+    after = text[end:end + SYMBOL_AFTER_CHARS]
+    out = []
+    for m in SYMBOL.finditer(before + " " + after):
+        tok = m.group(1)
+        parts = tok.split(".")
+        if parts[-1] in ("py", "md", "sh", "json", "yml", "txt", "jsonc"):
+            continue  # a bare filename, not a symbol
+        # dotted tokens contribute every component (`RankReport.policy`:
+        # the class line OR the attribute may sit at the cited line);
+        # slashed paths never match the SYMBOL regex
+        out.extend(p for p in parts if p)
+    return out
+
+
+def _symbol_near_line(
+    symbols: list[str], lines: list[str], lo: int, hi: int
+) -> bool:
+    w0 = max(0, lo - 1 - SYMBOL_LINE_WINDOW)
+    w1 = min(len(lines), hi + SYMBOL_LINE_WINDOW)
+    window = "\n".join(lines[w0:w1])
+    return any(s in window for s in symbols)
 
 
 def check_file(doc: Path, cache: dict) -> list[str]:
@@ -63,6 +111,17 @@ def check_file(doc: Path, cache: dict) -> list[str]:
             errors.append(
                 f"{rel}: anchor {path_part}:{m.group(2)}"
                 f"{'-' + hi if hi else ''} beyond end of file ({n} lines)"
+            )
+            continue
+        symbols = _nearby_symbols(text, m.start(), m.end())
+        if symbols and not _symbol_near_line(
+            symbols, _lines(hit, cache), lo, last
+        ):
+            errors.append(
+                f"{rel}: anchor {path_part}:{m.group(2)} — none of the "
+                f"annotated symbol(s) {sorted(set(symbols))} appear within "
+                f"+/-{SYMBOL_LINE_WINDOW} lines of the cited line; the "
+                "anchor drifted after a refactor"
             )
     return errors
 

@@ -83,22 +83,48 @@ class RDPAccountant:
 def compute_epsilon(
     *, q: float, sigma: float, steps: int, delta: float,
     alphas: Sequence[int] = DEFAULT_ALPHAS,
+    release_sigmas: Sequence[float] = (),
 ) -> float:
+    """Epsilon after ``steps`` compositions of the gradient mechanism plus
+    any per-step side releases.
+
+    ``release_sigmas`` are the noise multipliers of additional sensitivity-1
+    queries the pipeline makes against the *same* Poisson-sampled batch each
+    step — e.g. the quantile clipping policy's noised indicator count
+    (``repro.policies.quantile``).  Each composes as its own subsampled
+    Gaussian mechanism at rate ``q``; ignoring them would under-report the
+    spend, so every epsilon the engine reports flows through here.
+    """
     rdp = steps * rdp_subsampled_gaussian(q, sigma, alphas)
+    for rs in release_sigmas:
+        rdp = rdp + steps * rdp_subsampled_gaussian(q, rs, alphas)
     return eps_from_rdp(rdp, alphas, delta)[0]
 
 
 def find_noise_multiplier(
     *, target_epsilon: float, q: float, steps: int, delta: float,
     sigma_min: float = 0.3, sigma_max: float = 1e4, tol: float = 1e-4,
+    release_sigmas: Sequence[float] = (),
 ) -> float:
-    """Smallest sigma achieving eps(sigma) <= target_epsilon (bisection)."""
+    """Smallest sigma achieving eps(sigma) <= target_epsilon (bisection).
+
+    ``release_sigmas`` (fixed per-step side releases, e.g. the quantile
+    policy's indicator) are composed inside the bisection, so the returned
+    sigma lands the *total* spend on the target — no hand-tuned headroom.
+    """
 
     def eps(s: float) -> float:
-        return compute_epsilon(q=q, sigma=s, steps=steps, delta=delta)
+        return compute_epsilon(
+            q=q, sigma=s, steps=steps, delta=delta,
+            release_sigmas=release_sigmas,
+        )
 
     if eps(sigma_max) > target_epsilon:
-        raise ValueError("target epsilon unreachable even at sigma_max")
+        raise ValueError(
+            "target epsilon unreachable even at sigma_max"
+            + (" (the per-step policy releases alone may exceed it)"
+               if release_sigmas else "")
+        )
     lo, hi = sigma_min, sigma_max
     if eps(lo) <= target_epsilon:
         return lo

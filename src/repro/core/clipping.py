@@ -8,6 +8,14 @@ three-stage pipeline
     factor stage   -> C_i = clip_fn(||g_i||, R) * mask     (shared)
     gradient stage -> sum_i C_i g_i                        (mode-specific)
 
+The factor stage is delegated to a **ClipPolicy** (``repro.policies``):
+``fixed`` (the paper's flat R, the default), ``automatic`` (AUTO-S/AUTO-V
+normalization, no R), ``quantile`` (DP-adaptive R tracking a norm quantile,
+paying for its release in the accountant), and ``per_layer`` (per-tap-group
+thresholds).  Policies may carry state — pass it as the executor's third
+argument and thread the updated state through the train step
+(``launch.steps.make_train_step``).
+
 Modes
 -----
 - ``vmap``        Opacus analogue: materialize per-sample grads via
@@ -74,7 +82,6 @@ import jax.numpy as jnp
 
 from repro.core import fused as fused_mod
 from repro.core import ghost
-from repro.core.functions import get_clip_fn
 from repro.core.taps import ClipRuntime, Ctx, TapMeta, make_zero_taps
 from repro.utils.tree import flatten_dict, unflatten_dict
 
@@ -104,6 +111,11 @@ class ClipConfig:
     # rule; a plan whose device/shape fingerprint does not match the model
     # is rejected at trace time and the analytic rule applies.
     plan: Optional[Any] = None
+    # clipping policy (repro.policies.ClipPolicy).  None builds the fixed
+    # flat-R policy from (clip_norm, clip_fn) — exactly the pre-policy
+    # behavior.  Stateful policies (quantile R) receive their state as the
+    # executor's third argument.
+    policy: Optional[Any] = None
 
 
 def _plan_overrides(
@@ -209,6 +221,24 @@ def _assemble_bk_grads(
     return unflatten_dict(flat_grads)
 
 
+def _grouped_second_backward(st: "_NormState", c: Any, params: Any) -> Any:
+    """Second-backward gradient stage under per-layer-group clip factors.
+
+    The pullback cotangent is per-*sample* — one scalar weight per loss —
+    so a factor that differs per layer group cannot ride a single second
+    backward.  Run one pullback per group and keep each group's own leaves:
+    correct for any G, at G x the second-backward cost.  The book-keeping
+    engines do this for free (per-tap einsums); prefer them when G is large.
+    """
+    out: dict[str, jax.Array] = {}
+    for gi in range(len(c.groups)):
+        clipped = st.pull(c.factors[gi].astype(st.losses.dtype))[0]
+        for path, val in flatten_dict(clipped).items():
+            if c.group_index(path) == gi:
+                out[path] = val
+    return unflatten_dict(out)
+
+
 @dataclasses.dataclass
 class _NormState:
     """What the norms stage hands the gradient stage (one step's plumbing)."""
@@ -221,46 +251,82 @@ class _NormState:
     gs: Optional[dict] = None  # explicit tap cotangents
     meta: Optional[dict] = None
     per_sample_grads: Optional[Any] = None  # vmap oracle only
+    # per-param-path squared norm contributions (grouped policies only):
+    # {param_path: (B,)}, summing to norms2
+    path_norms2: Optional[dict[str, jax.Array]] = None
 
 
 class ClipExecutor:
     """Template for every clipping mode: norms -> clip factors -> gradients.
 
     Subclasses implement ``_norm_state`` and ``_weighted_grads``; the factor
-    stage and the (loss, grads, aux) contract are shared.  Instances are
-    plain callables: ``fn(params, batch) -> (mean_loss, clipped_grad_sum,
-    aux)`` with aux = {"per_sample_norms": (B,), "clip_factors": (B,)} —
-    jit/pjit-safe, noise added downstream by the privacy engine.
+    stage (delegated to the ClipPolicy) and the (loss, grads, aux) contract
+    are shared.  Instances are plain callables: ``fn(params, batch,
+    policy_state=None) -> (mean_loss, clipped_grad_sum, aux)`` with aux =
+    {"per_sample_norms": (B,), "clip_factors": (B,)} — jit/pjit-safe, noise
+    added downstream by the privacy engine.  ``policy_state`` is the pytree
+    a stateful policy carries between steps (``policy.init_state()`` when
+    omitted — correct for stateless policies, a fresh default otherwise).
     """
 
     def __init__(self, loss_with_ctx: LossFn, cfg: ClipConfig):
         self.loss = loss_with_ctx
         self.cfg = cfg
-        self.clip_fn = get_clip_fn(cfg.clip_fn)
+        if cfg.policy is not None:
+            self.policy = cfg.policy
+        else:
+            from repro.policies.fixed import FixedPolicy
+
+            self.policy = FixedPolicy(
+                clip_norm=cfg.clip_norm, clip_fn=cfg.clip_fn
+            )
+        self.grouped = bool(getattr(self.policy, "grouped", False))
 
     # -- stage 1: mode-specific -------------------------------------------
     def _norm_state(self, params, batch) -> _NormState:
         raise NotImplementedError
 
-    # -- stage 2: shared ---------------------------------------------------
-    def _clip_factors(self, norms: jax.Array, mask) -> jax.Array:
-        c = self.clip_fn(norms, self.cfg.clip_norm)
+    # -- stage 2: shared (policy-delegated) --------------------------------
+    def _clip_factors(self, norms: jax.Array, mask, st: _NormState, pstate):
+        c = self.policy.clip_factors(norms, pstate, path_norms2=st.path_norms2)
+        if hasattr(c, "factors"):  # GroupedFactors
+            f = c.factors
+            if mask is not None:
+                f = f * mask.astype(f.dtype)[None, :]
+            return dataclasses.replace(c, factors=jax.lax.stop_gradient(f))
         if mask is not None:
             c = c * mask.astype(c.dtype)
         return jax.lax.stop_gradient(c)
 
     # -- stage 3: mode-specific -------------------------------------------
-    def _weighted_grads(self, st: _NormState, c: jax.Array, params) -> Any:
+    def _weighted_grads(self, st: _NormState, c, params) -> Any:
         raise NotImplementedError
 
-    def __call__(self, params, batch):
+    def _validate_groups(self, meta: dict[str, TapMeta]) -> None:
+        """A group boundary must not split a tap's (weight, bias) pair —
+        their per-sample norm is computed jointly."""
+        for name, m in meta.items():
+            if m.bias_path is None:
+                continue
+            if self.policy.group_of(m.param_path) != self.policy.group_of(
+                m.bias_path
+            ):
+                raise ValueError(
+                    f"layer groups split tap {name!r}: weight "
+                    f"{m.param_path!r} and bias {m.bias_path!r} land in "
+                    "different groups but share one per-sample norm"
+                )
+
+    def __call__(self, params, batch, policy_state=None):
         mask = _batch_mask(batch)
         st = self._norm_state(params, batch)
         norms = jnp.sqrt(st.norms2)
-        c = self._clip_factors(norms, mask)
+        pstate = policy_state if policy_state is not None else self.policy.init_state()
+        c = self._clip_factors(norms, mask, st, pstate)
         grads = self._weighted_grads(st, c, params)
         b = st.losses.shape[0]
-        aux = {"per_sample_norms": norms, "clip_factors": c}
+        rep = c.representative if hasattr(c, "representative") else c
+        aux = {"per_sample_norms": norms, "clip_factors": rep}
         return jnp.sum(st.losses) / b, grads, aux
 
 
@@ -277,7 +343,7 @@ class NonPrivateExecutor(ClipExecutor):
             pull=pull,
         )
 
-    def _clip_factors(self, norms, mask):
+    def _clip_factors(self, norms, mask, st, pstate):
         return jnp.ones_like(norms)
 
     def _weighted_grads(self, st, c, params):
@@ -298,16 +364,47 @@ class VmapExecutor(ClipExecutor):
         losses, grads = jax.vmap(
             lambda ex: jax.value_and_grad(single, argnums=0)(params, ex)
         )(per_ex)
-        flat, _ = jax.tree_util.tree_flatten(grads)
-        norms2 = sum(
-            jnp.sum(
-                jnp.square(g.astype(jnp.float32)).reshape(g.shape[0], -1), axis=-1
+        path_norms2 = None
+        if self.grouped:
+            # same trace-time gate as the tap engines: a group boundary
+            # through a tap's (weight, bias) pair would give this oracle
+            # semantics no other executor can reproduce
+            self._validate_groups(discover_meta(self.loss, params, batch))
+            # exact per-leaf contributions: grouped policies sum them per
+            # group, and weight/bias leaves fall into the same group as the
+            # tap engines assign them (validated above)
+            path_norms2 = {
+                path: jnp.sum(
+                    jnp.square(g.astype(jnp.float32)).reshape(g.shape[0], -1),
+                    axis=-1,
+                )
+                for path, g in flatten_dict(grads).items()
+            }
+            norms2 = sum(path_norms2.values())
+        else:
+            flat, _ = jax.tree_util.tree_flatten(grads)
+            norms2 = sum(
+                jnp.sum(
+                    jnp.square(g.astype(jnp.float32)).reshape(g.shape[0], -1),
+                    axis=-1,
+                )
+                for g in flat
             )
-            for g in flat
+        return _NormState(
+            losses=losses, norms2=norms2, per_sample_grads=grads,
+            path_norms2=path_norms2,
         )
-        return _NormState(losses=losses, norms2=norms2, per_sample_grads=grads)
 
     def _weighted_grads(self, st, c, params):
+        if hasattr(c, "for_path"):  # GroupedFactors: per-leaf group factors
+            flat = flatten_dict(st.per_sample_grads)
+            out = {
+                path: jnp.einsum(
+                    "b...,b->...", g.astype(jnp.float32), c.for_path(path)
+                ).astype(g.dtype)
+                for path, g in flat.items()
+            }
+            return unflatten_dict(out)
         return jax.tree_util.tree_map(
             lambda g: jnp.einsum(
                 "b...,b->...", g.astype(jnp.float32), c
@@ -371,33 +468,48 @@ class FusedExecutor(ClipExecutor):
         ones = jnp.ones_like(losses)
         _, banks, gs_late = pull(ones)  # param grads DCE'd
 
+        if self.grouped:
+            self._validate_groups(meta)
         norms2 = jnp.zeros((b,), jnp.float32)
+        path_norms2: Optional[dict[str, jax.Array]] = {} if self.grouped else None
         for name, m in meta.items():
             if m.fused:
-                norms2 = norms2 + _fold_bank_norm(banks[name]["n"], b)
+                n = _fold_bank_norm(banks[name]["n"], b)
             else:
-                norms2 = norms2 + ghost.tap_norm_sq(
+                n = ghost.tap_norm_sq(
                     m, acts.get(name), gs_late[name],
                     mode=cfg.mode, decision_by=cfg.decision_by,
                     ghost_block=cfg.ghost_block, inst_block_d=cfg.inst_block_d,
                     override=overrides.get(name),
                 )
+            norms2 = norms2 + n
+            if path_norms2 is not None:
+                path_norms2[m.param_path] = (
+                    path_norms2[m.param_path] + n
+                    if m.param_path in path_norms2 else n
+                )
         return _NormState(
             losses=losses, norms2=norms2, pull=pull, banks=banks,
-            acts=acts, gs=gs_late, meta=meta,
+            acts=acts, gs=gs_late, meta=meta, path_norms2=path_norms2,
         )
 
     def _weighted_grads(self, st, c, params):
+        grouped = hasattr(c, "for_path")
         if not self.is_bk:
+            if grouped:
+                return _grouped_second_backward(st, c, params)
             clipped, _, _ = st.pull(c.astype(st.losses.dtype))  # 2nd backward
             return clipped
 
-        # book-keeping: direct einsums from the banks; nothing re-propagates
+        # book-keeping: direct einsums from the banks; nothing re-propagates.
+        # Grouped policies are free here — each tap contracts against its own
+        # group's factors.
         def ws_fn(name, m, param_shape):
+            cw = c.for_path(m.param_path) if grouped else c
             if m.fused:
-                return ghost.bank_weighted_grads(m, st.banks[name], c, param_shape)
+                return ghost.bank_weighted_grads(m, st.banks[name], cw, param_shape)
             return ghost.tap_weighted_grads(
-                m, st.acts.get(name), st.gs[name], c, param_shape
+                m, st.acts.get(name), st.gs[name], cw, param_shape
             )
 
         return _assemble_bk_grads(st.meta, params, ws_fn)
@@ -430,27 +542,40 @@ class TapsExecutor(ClipExecutor):
         ones = jnp.ones_like(losses)
         _, gs = pull(ones)  # first backward; unused param grads are DCE'd
 
+        if self.grouped:
+            self._validate_groups(meta)
         norms2 = jnp.zeros((b,), jnp.float32)
+        path_norms2: Optional[dict[str, jax.Array]] = {} if self.grouped else None
         for name, m in meta.items():
-            norms2 = norms2 + ghost.tap_norm_sq(
+            n = ghost.tap_norm_sq(
                 m, acts.get(name), gs[name],
                 mode=self.branch_mode, decision_by=cfg.decision_by,
                 ghost_block=cfg.ghost_block, inst_block_d=cfg.inst_block_d,
                 override=overrides.get(name),
             )
+            norms2 = norms2 + n
+            if path_norms2 is not None:
+                path_norms2[m.param_path] = (
+                    path_norms2[m.param_path] + n
+                    if m.param_path in path_norms2 else n
+                )
         return _NormState(
             losses=losses, norms2=norms2, pull=pull, acts=acts, gs=gs,
-            meta=meta,
+            meta=meta, path_norms2=path_norms2,
         )
 
     def _weighted_grads(self, st, c, params):
+        grouped = hasattr(c, "for_path")
         if self.branch_mode != "bk_mixed":
+            if grouped:
+                return _grouped_second_backward(st, c, params)
             clipped, _ = st.pull(c.astype(st.losses.dtype))  # second backward
             return clipped
         return _assemble_bk_grads(
             st.meta, params,
             lambda name, m, shape: ghost.tap_weighted_grads(
-                m, st.acts.get(name), st.gs[name], c, shape
+                m, st.acts.get(name), st.gs[name],
+                c.for_path(m.param_path) if grouped else c, shape
             ),
         )
 
@@ -472,12 +597,16 @@ _EXECUTORS = {
 def dp_value_and_clipped_grad(
     loss_with_ctx: LossFn,
     cfg: ClipConfig = ClipConfig(),
-) -> Callable[[Any, Any], tuple[jax.Array, Any, dict]]:
-    """Returns fn(params, batch) -> (mean_loss, clipped_grad_sum, aux).
+) -> Callable[..., tuple[jax.Array, Any, dict]]:
+    """Returns fn(params, batch, policy_state=None) -> (mean_loss,
+    clipped_grad_sum, aux).
 
     ``clipped_grad_sum`` is sum_i C_i g_i (noise is added by the optimizer /
     privacy engine; keeping it separate lets benchmarks isolate clipping).
-    aux = {"per_sample_norms": (B,), "clip_factors": (B,)}.
+    aux = {"per_sample_norms": (B,), "clip_factors": (B,)}.  The optional
+    ``policy_state`` feeds a stateful ClipPolicy (``cfg.policy``); the
+    policy's *update* runs outside this function (once per logical batch,
+    see ``launch.steps``), so the executor stays a pure clipping map.
     """
     try:
         executor_cls = _EXECUTORS[cfg.mode]

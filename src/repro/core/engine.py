@@ -46,6 +46,11 @@ class PrivacyEngine:
     # measured-cost branch plan (repro.tuner.ClipPlan); set directly, via
     # use_plan(), or produced in place by tune()
     plan: Optional[Any] = None
+    # clipping policy (repro.policies.ClipPolicy).  None -> the fixed flat-R
+    # policy built from (max_grad_norm, clip_fn) — the paper's mechanism.
+    # A policy with a per-step release (quantile) is composed into every
+    # epsilon this engine reports, including the target-epsilon bisection.
+    clip_policy: Optional[Any] = None
 
     def __post_init__(self):
         self.sampling_rate = self.batch_size / self.sample_size
@@ -55,6 +60,12 @@ class PrivacyEngine:
             self.steps = int(self.epochs * self.sample_size / self.batch_size)
         if self.target_delta is None:
             self.target_delta = 1.0 / (2 * self.sample_size)
+        if self.clip_policy is None:
+            from repro.policies.fixed import FixedPolicy
+
+            self.clip_policy = FixedPolicy(
+                clip_norm=self.max_grad_norm, clip_fn=self.clip_fn
+            )
         if self.noise_multiplier is None:
             if self.target_epsilon is None:
                 raise ValueError("need target_epsilon or noise_multiplier")
@@ -63,6 +74,7 @@ class PrivacyEngine:
                 q=self.sampling_rate,
                 steps=self.steps,
                 delta=self.target_delta,
+                release_sigmas=self._release_sigmas(),
             )
         self.accountant = RDPAccountant()
         self._clip_cfg = ClipConfig(
@@ -71,7 +83,17 @@ class PrivacyEngine:
             clip_fn=self.clip_fn,
             frozen_prefixes=self.frozen_prefixes,
             plan=self.plan,
+            policy=self.clip_policy,
         )
+
+    def _release_sigmas(self) -> tuple[float, ...]:
+        """Noise multipliers of the policy's per-step side releases."""
+        ev = self.clip_policy.release_event()
+        return (ev.release_sigma,) if ev.spends else ()
+
+    def init_policy_state(self) -> Any:
+        """The policy-state pytree the first train step should receive."""
+        return self.clip_policy.init_state()
 
     # -- measured-cost autotuning -----------------------------------------
     def use_plan(self, plan: Any) -> None:
@@ -180,6 +202,23 @@ class PrivacyEngine:
 
         budget = _mb.DEFAULT_BUDGET_BYTES if budget_bytes is None else budget_bytes
         meta = discover_meta(self.loss_with_ctx, params, batch)
+        policy_fp = self.clip_policy.fingerprint()
+
+        def stamp(p):
+            # plans are policy-stamped so a fleet cannot certify one plan
+            # across ranks running different clipping policies.  Re-stamping
+            # a plan agreed under another policy voids that agreement claim
+            # (the measurements stay valid — branch decisions are
+            # policy-independent); the consensus path below re-agrees and
+            # re-stamps provenance honestly.
+            if p is None or p.policy_fingerprint == policy_fp:
+                return p
+            cleared = {} if p.agreed_hash is None else {
+                "agreed_hash": None, "agreed_ranks": None,
+            }
+            return dataclasses.replace(
+                p, policy_fingerprint=policy_fp, **cleared
+            )
 
         def agree_and_save(measured):
             # one agreement path for every consensus branch below: submit
@@ -187,7 +226,10 @@ class PrivacyEngine:
             # the fleet adopted — never the rank-local measurement
             from repro.tuner import consensus as _cons
 
-            adopted = _cons.fleet_agree(measured, meta, gather_fn=gather_fn)
+            adopted = _cons.fleet_agree(
+                stamp(measured), meta, gather_fn=gather_fn,
+                policy_fingerprint=policy_fp,
+            )
             if plan_path is not None:
                 adopted.save(
                     default_plan_path(arch, adopted.fingerprint)
@@ -232,12 +274,13 @@ class PrivacyEngine:
                          cached.device, _device_string())
                 cached = None
             if cached is not None and budget_ok and cached.matches(meta):
+                cached = stamp(cached)
                 if consensus:
                     cached = agree_and_save(cached)
                 self.use_plan(cached)
                 return cached
         measure_cfg = measure or MeasureConfig()
-        plan = build_plan(meta, measure=measure_cfg, arch=arch)
+        plan = stamp(build_plan(meta, measure=measure_cfg, arch=arch))
         if search_max_batch:
             grad_fn = dp_value_and_clipped_grad(
                 self.loss_with_ctx, dataclasses.replace(self._clip_cfg, plan=plan)
@@ -302,9 +345,22 @@ class PrivacyEngine:
         """(params, batch) -> (mean_loss, sum_i C_i g_i, aux). jit/pjit-safe."""
         return dp_value_and_clipped_grad(self.loss_with_ctx, self._clip_cfg)
 
-    def privatize(self, grad_sum: Any, key: jax.Array) -> Any:
-        """Add noise once per logical batch; normalize by batch size."""
-        std = self.noise_multiplier * self.max_grad_norm
+    def privatize(
+        self, grad_sum: Any, key: jax.Array, policy_state: Any = None
+    ) -> Any:
+        """Add noise once per logical batch; normalize by batch size.
+
+        The noise std is ``sigma * policy.sensitivity(state)`` — for the
+        fixed policy that is ``sigma * R`` exactly as before; the quantile
+        policy's adapted R and the automatic policy's unit bound flow from
+        the same call.  ``policy_state=None`` uses the policy's init state
+        (correct for stateless policies).
+        """
+        pstate = (
+            policy_state if policy_state is not None
+            else self.clip_policy.init_state()
+        )
+        std = self.noise_multiplier * self.clip_policy.sensitivity(pstate)
         noisy = add_dp_noise(grad_sum, key, std)
         return jax.tree_util.tree_map(
             lambda g: (g.astype(jnp.float32) / self.batch_size).astype(g.dtype), noisy
@@ -312,7 +368,10 @@ class PrivacyEngine:
 
     # -- accounting --------------------------------------------------------
     def record_step(self, n: int = 1) -> None:
+        """Compose n steps: the gradient mechanism + any policy release."""
         self.accountant.step(q=self.sampling_rate, sigma=self.noise_multiplier, steps=n)
+        for rs in self._release_sigmas():
+            self.accountant.step(q=self.sampling_rate, sigma=rs, steps=n)
 
     def privacy_spent(self, steps: Optional[int] = None) -> tuple[float, float]:
         if steps is not None:
@@ -321,6 +380,7 @@ class PrivacyEngine:
                 sigma=self.noise_multiplier,
                 steps=steps,
                 delta=self.target_delta,
+                release_sigmas=self._release_sigmas(),
             )
         else:
             eps = self.accountant.get_epsilon(self.target_delta)

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.clipping import ClipConfig, dp_value_and_clipped_grad
+from repro.core.clipping import ClipConfig, _batch_mask, dp_value_and_clipped_grad
 from repro.core.noise import add_dp_noise
 from repro.optim.optimizers import Optimizer, apply_updates
 
@@ -29,21 +29,43 @@ class DPTrainConfig:
     # measured-cost branch plan (repro.tuner.ClipPlan); threaded into the
     # clipping config so jitted steps pick the profiled branch per tap
     plan: Optional[Any] = None
+    # clipping policy (repro.policies.ClipPolicy); None builds the fixed
+    # flat-R policy from (clip_norm, clip_fn).  Stateful policies carry
+    # their pytree in state["policy"], updated once per logical batch.
+    policy: Optional[Any] = None
 
 
-def make_train_state(model, key: jax.Array, optimizer: Optimizer) -> dict:
+def _policy_for(dp: DPTrainConfig):
+    if dp.policy is not None:
+        return dp.policy
+    from repro.policies.fixed import FixedPolicy
+
+    return FixedPolicy(clip_norm=dp.clip_norm, clip_fn=dp.clip_fn)
+
+
+def make_train_state(
+    model, key: jax.Array, optimizer: Optimizer, policy: Any = None
+) -> dict:
+    if policy is None:
+        from repro.policies.fixed import FixedPolicy
+
+        policy = FixedPolicy()
     params = model.init(key)
     return {
         "params": params,
         "opt": optimizer.init(params),
         "step": jnp.zeros((), jnp.int32),
         "rng": jax.random.PRNGKey(0),
+        # clipping-policy state (quantile R, per-layer thresholds, ...):
+        # lives in the train state so it is checkpointed and restored with
+        # everything else — adaptation survives preemption bit-identically
+        "policy": policy.init_state(),
     }
 
 
-def abstract_train_state(model, optimizer: Optimizer) -> Any:
+def abstract_train_state(model, optimizer: Optimizer, policy: Any = None) -> Any:
     return jax.eval_shape(
-        lambda: make_train_state(model, jax.random.PRNGKey(0), optimizer)
+        lambda: make_train_state(model, jax.random.PRNGKey(0), optimizer, policy)
     )
 
 
@@ -53,25 +75,44 @@ def make_train_step(
     schedule: Callable,
     dp: DPTrainConfig,
 ) -> Callable:
-    """Full DP step: clip (mixed ghost) -> noise -> optimizer update."""
+    """Full DP step: clip (policy factors) -> noise -> optimizer update.
+
+    The clip factors are computed under the *current* policy state; the
+    noise std uses the same pre-update state (``policy.sensitivity``), and
+    only then does the policy update run — so a quantile release never
+    retroactively rescales the step that produced it.
+    """
+    policy = _policy_for(dp)
+    # the RESOLVED policy goes into the clip config: the factor stage and
+    # the noise/update below must share one object, not two equivalently-
+    # constructed defaults that could drift apart
     clip_cfg = ClipConfig(
         mode=dp.clipping_mode, clip_norm=dp.clip_norm, clip_fn=dp.clip_fn,
-        plan=dp.plan,
+        plan=dp.plan, policy=policy,
     )
     grad_fn = dp_value_and_clipped_grad(model.loss_with_ctx, clip_cfg)
 
     def train_step(state: dict, batch: Any) -> tuple[dict, dict]:
-        loss, grad_sum, aux = grad_fn(state["params"], batch)
-        rng, noise_key = jax.random.split(state["rng"])
+        # legacy states (pre-policy checkpoints, hand-built test states)
+        # may lack the "policy" entry; run them on the init state, and only
+        # write the updated state back when the slot exists
+        pstate = state.get("policy", policy.init_state())
+        loss, grad_sum, aux = grad_fn(state["params"], batch, pstate)
+        rng, noise_key, policy_key = jax.random.split(state["rng"], 3)
         if dp.clipping_mode == "non_private":
             grads = jax.tree_util.tree_map(
                 lambda g: g.astype(jnp.float32), grad_sum
             )
+            new_pstate = pstate
         else:
-            std = dp.noise_multiplier * dp.clip_norm
+            std = dp.noise_multiplier * policy.sensitivity(pstate)
             noisy = add_dp_noise(grad_sum, noise_key, std)
             grads = jax.tree_util.tree_map(
                 lambda g: g.astype(jnp.float32) / dp.logical_batch, noisy
+            )
+            new_pstate, _ = policy.update(
+                pstate, aux["per_sample_norms"], key=policy_key,
+                mask=_batch_mask(batch),
             )
         lr = schedule(state["step"])
         updates, opt_state = optimizer.update(
@@ -84,11 +125,15 @@ def make_train_step(
             "step": state["step"] + 1,
             "rng": rng,
         }
+        if "policy" in state:
+            new_state["policy"] = new_pstate
         metrics = {
             "loss": loss,
             "lr": lr,
             "grad_norm_mean": jnp.mean(aux["per_sample_norms"]),
             "clip_frac": jnp.mean((aux["clip_factors"] < 1.0).astype(jnp.float32)),
+            # the policy's current sensitivity bound (== R for fixed/quantile)
+            "clip_norm": policy.sensitivity(pstate) * jnp.ones(()),
         }
         return new_state, metrics
 
@@ -96,43 +141,69 @@ def make_train_step(
 
 
 def make_clipped_microstep(model, dp: DPTrainConfig) -> Callable:
-    """Gradient-accumulation half: returns (loss, clipped grad SUM, aux).
+    """Gradient-accumulation half: (params, batch, policy_state) ->
+    (loss, clipped grad SUM, aux).
 
-    The caller sums across microbatches and finalizes with
-    ``make_noise_finalize`` — the paper's virtual_step pattern.
+    The caller sums across microbatches — every microstep under the SAME
+    policy state — and finalizes with ``make_noise_finalize`` (which also
+    runs the one policy update per logical batch): the paper's virtual_step
+    pattern, policy-aware.
     """
     clip_cfg = ClipConfig(
         mode=dp.clipping_mode, clip_norm=dp.clip_norm, clip_fn=dp.clip_fn,
-        plan=dp.plan,
+        plan=dp.plan, policy=_policy_for(dp),
     )
     return dp_value_and_clipped_grad(model.loss_with_ctx, clip_cfg)
 
 
 def make_noise_finalize(optimizer: Optimizer, schedule: Callable, dp: DPTrainConfig):
-    def finalize(state: dict, grad_sum: Any) -> dict:
-        rng, noise_key = jax.random.split(state["rng"])
+    """Noise + update once per logical batch.
+
+    ``norms``/``mask`` are the concatenated per-sample norms (and Poisson
+    mask) of the whole logical batch, collected across microsteps; they
+    feed the policy update — one release per *noise addition*, so the
+    quantile policy spends exactly once per accounted step.  Pass
+    ``norms=None`` to skip the update (legacy callers, fixed policies).
+    """
+    policy = _policy_for(dp)
+
+    def finalize(
+        state: dict, grad_sum: Any, norms: Any = None, mask: Any = None
+    ) -> dict:
+        pstate = state.get("policy", policy.init_state())
+        rng, noise_key, policy_key = jax.random.split(state["rng"], 3)
         if dp.clipping_mode == "non_private":
             # mirror make_train_step: no noise, no logical-batch division
             grads = jax.tree_util.tree_map(
                 lambda g: g.astype(jnp.float32), grad_sum
             )
+            new_pstate = pstate
         else:
-            std = dp.noise_multiplier * dp.clip_norm
+            std = dp.noise_multiplier * policy.sensitivity(pstate)
             noisy = add_dp_noise(grad_sum, noise_key, std)
             grads = jax.tree_util.tree_map(
                 lambda g: g.astype(jnp.float32) / dp.logical_batch, noisy
             )
+            if norms is not None:
+                new_pstate, _ = policy.update(
+                    pstate, norms, key=policy_key, mask=mask
+                )
+            else:
+                new_pstate = pstate
         lr = schedule(state["step"])
         updates, opt_state = optimizer.update(
             grads, state["opt"], state["params"], state["step"], lr
         )
         params = apply_updates(state["params"], updates)
-        return {
+        new_state = {
             "params": params,
             "opt": opt_state,
             "step": state["step"] + 1,
             "rng": rng,
         }
+        if "policy" in state:
+            new_state["policy"] = new_pstate
+        return new_state
 
     return finalize
 

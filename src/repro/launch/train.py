@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import build_model, get_arch
+from repro.core.clipping import _batch_mask
 from repro.core.engine import PrivacyEngine
 from repro.data.pipeline import DataPipeline
 from repro.data.poisson import poisson_sample_mask
@@ -73,6 +74,25 @@ def parse_args(argv=None):
                     help="clipping mode (see core.clipping.MODES), or 'auto' "
                          "to adopt the tuned plan's recommended_mode")
     ap.add_argument("--clip-norm", type=float, default=1.0)
+    ap.add_argument("--clip-policy", default="fixed",
+                    choices=["fixed", "automatic", "quantile", "per_layer"],
+                    help="clipping policy (repro.policies): fixed flat R, "
+                         "automatic AUTO-S normalization (no R), quantile "
+                         "DP-adaptive R, or per_layer group thresholds")
+    ap.add_argument("--clip-quantile", type=float, default=0.5,
+                    help="quantile policy: target norm quantile for R")
+    ap.add_argument("--quantile-lr", type=float, default=0.2,
+                    help="quantile policy: geometric update rate for R")
+    ap.add_argument("--quantile-sigma", type=float, default=1.0,
+                    help="quantile policy: noise multiplier of the "
+                         "indicator release (composed into the accountant; "
+                         "0 disables the release and its DP guarantee)")
+    ap.add_argument("--auto-gamma", type=float, default=0.01,
+                    help="automatic policy: stability constant (0 = AUTO-V)")
+    ap.add_argument("--layer-groups", default="",
+                    help="per_layer policy: comma-separated param-path "
+                         "prefixes, one threshold per group (a catch-all "
+                         "group is added automatically)")
     ap.add_argument("--target-epsilon", type=float, default=None)
     ap.add_argument("--noise-multiplier", type=float, default=1.0)
     ap.add_argument("--sample-size", type=int, default=50000)
@@ -110,7 +130,27 @@ def run_once(args) -> int:
     model = build_model(cfg)
     mesh = make_host_mesh()
 
-    # privacy engine: sigma from target epsilon (or given), accountant attached
+    # clipping policy (repro.policies): make_policy filters the kwarg union
+    # down to what the chosen policy's __init__ actually takes
+    from repro.policies import make_policy
+
+    policy = make_policy(
+        args.clip_policy,
+        clip_norm=args.clip_norm,
+        init_clip_norm=args.clip_norm,
+        gamma=args.auto_gamma,
+        target_quantile=args.clip_quantile,
+        lr=args.quantile_lr,
+        release_sigma=args.quantile_sigma,
+        groups=tuple(g for g in args.layer_groups.split(",") if g),
+    )
+    if args.clip_policy != "fixed":
+        log.info("clipping policy: %s", policy.fingerprint())
+
+    # privacy engine: sigma from target epsilon (or given), accountant
+    # attached.  With --target-epsilon the bisection composes the policy's
+    # per-step release (quantile indicator) so the TOTAL spend hits the
+    # target — no hand-picked sigma, no silent under-accounting.
     def make_engine(batch_size: int, mode: str) -> PrivacyEngine:
         return PrivacyEngine(
             loss_with_ctx=model.loss_with_ctx,
@@ -121,6 +161,7 @@ def run_once(args) -> int:
             target_epsilon=args.target_epsilon,
             noise_multiplier=None if args.target_epsilon else args.noise_multiplier,
             mode=mode,
+            clip_policy=policy,
         )
 
     # '--mode auto' is resolved from the tuned plan below; tune/search under
@@ -133,7 +174,7 @@ def run_once(args) -> int:
     optimizer = adam(state_dtype=jnp.dtype(cfg.opt_state_dtype))
     schedule = warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps)
 
-    state = make_train_state(model, jax.random.PRNGKey(0), optimizer)
+    state = make_train_state(model, jax.random.PRNGKey(0), optimizer, policy)
 
     # measured-cost autotuning: load a cached ClipPlan or profile one now.
     # Memory certificates (max-batch search / re-certification) compile at
@@ -163,7 +204,9 @@ def run_once(args) -> int:
             from repro.tuner.consensus import certify_fleet_hash, verify_adopted
 
             plan = ClipPlan.load(args.plan)
-            verify_adopted(plan, metas)
+            verify_adopted(
+                plan, metas, policy_fingerprint=policy.fingerprint()
+            )
             certify_fleet_hash(plan)
         else:
             try:
@@ -296,8 +339,8 @@ def run_once(args) -> int:
         from repro.tuner.consensus import certify_fleet_value
 
         certify_fleet_value(
-            "adopted mode/batch",
-            f"{clip_mode}:{physical}:{accum}:"
+            "adopted mode/batch/policy",
+            f"{clip_mode}:{physical}:{accum}:{policy.fingerprint()}:"
             f"{plan.consensus_hash() if plan is not None else '-'}",
         )
 
@@ -308,6 +351,7 @@ def run_once(args) -> int:
         logical_batch=logical_eff,
         accumulation_steps=accum,
         plan=plan,
+        policy=policy,
     )
     step_fn = make_train_step(model, optimizer, schedule, dp)
 
@@ -327,7 +371,15 @@ def run_once(args) -> int:
     if args.ckpt_dir:
         manager = CheckpointManager(args.ckpt_dir, save_every=args.ckpt_every)
         if args.resume and manager.latest() is not None:
-            start_step, state = manager.restore(shardings=st_sh)
+            # restore to host first: a pre-policy checkpoint lacks the
+            # state["policy"] subtree the sharding tree now carries, so
+            # fill it with the init state before re-sharding
+            start_step, rstate = manager.restore()
+            if "policy" not in rstate:
+                log.info("pre-policy checkpoint: starting the %s policy "
+                         "state fresh", policy.name)
+                rstate["policy"] = policy.init_state()
+            state = jax.tree_util.tree_map(jax.device_put, rstate, st_sh)
             log.info("resumed from step %d", start_step)
             engine.record_step(start_step)
 
@@ -351,15 +403,20 @@ def run_once(args) -> int:
             st_spec = jax.eval_shape(lambda: state)
             b_spec = jax.eval_shape(lambda: batch_fn(0, 0))
             micro_raw = make_clipped_microstep(model, dp)
+            p_spec = st_spec["policy"]
             micro_fn = jax.jit(
-                micro_raw, in_shardings=(st_sh["params"], b_sh),
-            ).lower(st_spec["params"], b_spec).compile()
-            g_spec = jax.eval_shape(micro_raw, st_spec["params"], b_spec)[1]
+                micro_raw, in_shardings=(st_sh["params"], b_sh, st_sh["policy"]),
+            ).lower(st_spec["params"], b_spec, p_spec).compile()
+            g_spec = jax.eval_shape(micro_raw, st_spec["params"], b_spec, p_spec)[1]
+            # the policy update runs once per LOGICAL batch, over the
+            # concatenated per-sample norms (and Poisson mask) of every
+            # microstep — one quantile release per noise addition
+            n_spec = jax.ShapeDtypeStruct((physical * accum,), jnp.float32)
             fin_fn = jax.jit(
                 make_noise_finalize(optimizer, schedule, dp),
-                in_shardings=(st_sh, None), out_shardings=st_sh,
+                in_shardings=(st_sh, None, None, None), out_shardings=st_sh,
                 donate_argnums=(0,),
-            ).lower(st_spec, g_spec).compile()
+            ).lower(st_spec, g_spec, n_spec, n_spec).compile()
 
     watchdog = StepWatchdog()
     preempt = PreemptionHandler().install()
@@ -381,15 +438,26 @@ def run_once(args) -> int:
                 # loss/clip stats stay device arrays until logging: a
                 # float() inside the loop would sync the host per microstep
                 grad_sum, loss_acc, clip_hits = None, 0.0, 0.0
+                norms_parts, mask_parts = [], []
                 for _ in range(accum):
                     _, batch = pipeline.next()
-                    loss, g, aux = micro_fn(state["params"], batch)
+                    loss, g, aux = micro_fn(state["params"], batch, state["policy"])
                     grad_sum = g if grad_sum is None else jax.tree_util.tree_map(
                         jnp.add, grad_sum, g
                     )
                     loss_acc = loss_acc + loss
                     clip_hits = clip_hits + jnp.sum(aux["clip_factors"] < 1.0)
-                state = fin_fn(state, grad_sum)
+                    norms_parts.append(aux["per_sample_norms"])
+                    m = _batch_mask(batch)
+                    mask_parts.append(
+                        jnp.ones((physical,), jnp.float32) if m is None
+                        else m.astype(jnp.float32)
+                    )
+                state = fin_fn(
+                    state, grad_sum,
+                    jnp.concatenate(norms_parts).astype(jnp.float32),
+                    jnp.concatenate(mask_parts),
+                )
                 metrics = {
                     "loss": loss_acc / accum,
                     "lr": schedule(step_idx),

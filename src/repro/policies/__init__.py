@@ -1,0 +1,68 @@
+"""repro.policies — pluggable clipping policies on the ClipExecutor pipeline.
+
+The norms machinery (ghost / instantiation / book-keeping) answers "what is
+``||g_i||``, cheaply"; a policy answers "what do we do with it".  Four ship:
+
+- ``fixed``      the paper's flat R (the default; extracted, not changed)
+- ``automatic``  AUTO-S/AUTO-V normalization (arXiv:2206.07136) — no R
+- ``quantile``   DP-adaptive R tracking a target norm quantile, paying for
+                 its noised indicator release in the accountant
+- ``per_layer``  per-param-prefix-group thresholds with sum R_g^2 = R^2
+
+Select with ``make_policy(name, **kwargs)`` (kwargs filtered per policy) or
+construct directly.  ``ClipConfig.policy`` / ``PrivacyEngine(clip_policy=)``
+/ ``launch.train --clip-policy`` thread a policy end to end.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any
+
+from repro.policies.automatic import AutomaticPolicy
+from repro.policies.base import (
+    NO_RELEASE,
+    ClipPolicy,
+    GroupedFactors,
+    PrivacyEvent,
+    group_index,
+)
+from repro.policies.fixed import FixedPolicy
+from repro.policies.per_layer import PerLayerPolicy
+from repro.policies.quantile import QuantilePolicy
+
+POLICIES: dict[str, type] = {
+    "fixed": FixedPolicy,
+    "automatic": AutomaticPolicy,
+    "quantile": QuantilePolicy,
+    "per_layer": PerLayerPolicy,
+}
+
+
+def make_policy(name: str, **kwargs: Any) -> ClipPolicy:
+    """Build a policy by name, keeping only the kwargs its __init__ takes.
+
+    One call site (the CLI) holds the union of every policy's knobs; the
+    filter means adding a knob to one policy never breaks constructing the
+    others.
+    """
+    try:
+        cls = POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown clip policy {name!r}; have {sorted(POLICIES)}")
+    accepted = set(inspect.signature(cls.__init__).parameters) - {"self"}
+    return cls(**{k: v for k, v in kwargs.items() if k in accepted})
+
+
+__all__ = [
+    "ClipPolicy",
+    "PrivacyEvent",
+    "NO_RELEASE",
+    "GroupedFactors",
+    "group_index",
+    "FixedPolicy",
+    "AutomaticPolicy",
+    "QuantilePolicy",
+    "PerLayerPolicy",
+    "POLICIES",
+    "make_policy",
+]

@@ -1,0 +1,50 @@
+"""Automatic (normalization) clipping — Bu et al., arXiv:2206.07136.
+
+AUTO-S: ``C_i = 1 / (||g_i|| + gamma)`` — every per-sample gradient is
+*normalized* rather than thresholded, which removes the R hyperparameter
+entirely (R merges multiplicatively into the learning rate, so it is fixed
+at 1 here).  The stability constant ``gamma > 0`` keeps small gradients
+informative and yields the convergence guarantee of the paper; ``gamma = 0``
+recovers AUTO-V (pure normalization).
+
+Sensitivity: ``||C_i g_i|| = ||g_i|| / (||g_i|| + gamma) <= 1`` — the noise
+is calibrated to 1 regardless of the norm distribution, which is exactly why
+no R sweep is needed.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.policies.base import ClipPolicy
+
+
+class AutomaticPolicy(ClipPolicy):
+    name = "automatic"
+
+    def __init__(self, gamma: float = 0.01):
+        if gamma < 0:
+            raise ValueError(f"gamma must be >= 0, got {gamma}")
+        self.gamma = float(gamma)
+
+    def clip_factors(
+        self,
+        norms: jax.Array,
+        state: dict[str, jax.Array],
+        *,
+        path_norms2: Optional[dict[str, jax.Array]] = None,
+    ) -> jax.Array:
+        del state, path_norms2
+        # AUTO-V (gamma == 0) guards the division; AUTO-S is smooth already
+        denom = norms + self.gamma if self.gamma > 0 else jax.numpy.maximum(
+            norms, 1e-12
+        )
+        return 1.0 / denom
+
+    def sensitivity(self, state: dict[str, jax.Array]) -> float:
+        del state
+        return 1.0
+
+    def fingerprint(self) -> str:
+        return f"automatic:gamma={self.gamma:g}"

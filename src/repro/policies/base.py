@@ -1,0 +1,164 @@
+"""The ClipPolicy protocol: how per-sample norms become clip factors.
+
+The paper fixes one global threshold R and spends its machinery on computing
+``||g_i||`` cheaply; the *policy* that turns those norms into clip factors is
+a separate axis entirely — and the one where accuracy and usability now live
+(Automatic Clipping, arXiv:2206.07136; per-layer thresholds,
+arXiv:2202.05089; DP quantile-adaptive R, Andrew et al. 2021).  Every
+``ClipExecutor`` mode delegates its factor stage to a ``ClipPolicy``:
+
+    init_state()                      -> pytree of jnp scalars/vectors, the
+                                         policy's trainable-adjacent state
+                                         (carried through the jitted step,
+                                         checkpointed with the train state)
+    clip_factors(norms, state, ...)   -> (B,) factors, or GroupedFactors for
+                                         per-layer-group policies
+    update(state, norms, ...)         -> (new_state, PrivacyEvent) — runs
+                                         once per *logical* batch; a policy
+                                         that adapts from the data must pay
+                                         for the release it makes, and the
+                                         PrivacyEvent is that bill
+    sensitivity(state)                -> the L2 bound on one sample's clipped
+                                         contribution; the noise std is
+                                         ``noise_multiplier * sensitivity``
+    fingerprint()                     -> stable string identity, folded into
+                                         the tuner ClipPlan consensus hash so
+                                         a fleet cannot mix policies
+
+State is a flat dict of jnp arrays (never empty — every policy carries at
+least a ``step`` counter) so it round-trips through ``checkpoint/`` and
+crosses jit boundaries as a plain pytree.  ``update`` must be jit-pure:
+host-side accounting reads the *static* ``release_event()`` instead of the
+traced return value.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PrivacyEvent:
+    """Static description of one policy update's side release.
+
+    ``release_sigma`` is the noise multiplier of the extra query the policy
+    makes against the batch (sensitivity 1 — e.g. the quantile policy's
+    noised indicator count); ``None`` means the update is data-free and
+    spends nothing.  The accountant composes one such release per step
+    alongside the gradient mechanism (``core.accountant.compute_epsilon``'s
+    ``release_sigmas``).  This is trace-time-static by design: epsilon is
+    computed on the host, never inside jit.
+    """
+
+    release_sigma: Optional[float] = None
+
+    @property
+    def spends(self) -> bool:
+        return self.release_sigma is not None and self.release_sigma > 0
+
+
+NO_RELEASE = PrivacyEvent()
+
+
+def group_index(groups: tuple[str, ...], path: str) -> int:
+    """Longest-prefix match of a param path against the group prefixes.
+
+    ``""`` is the catch-all (matches every path); grouped policies append it
+    automatically so every leaf belongs to exactly one group.
+    """
+    best, best_len = -1, -1
+    for i, prefix in enumerate(groups):
+        if path.startswith(prefix) and len(prefix) > best_len:
+            best, best_len = i, len(prefix)
+    if best < 0:
+        raise ValueError(
+            f"param path {path!r} matches no layer group in {groups!r} "
+            "(add a '' catch-all prefix)"
+        )
+    return best
+
+
+@dataclasses.dataclass
+class GroupedFactors:
+    """Per-layer-group clip factors: one (B,) row per group.
+
+    The gradient stages consume these per param path (``for_path``): the
+    book-keeping engines contract each tap's bank against its own group's
+    factors, the second-backward engines run one pullback per group, and the
+    vmap oracle scales each leaf's per-sample gradients directly.
+    ``representative`` is the per-sample scalar reported in aux (the most
+    aggressive factor across groups, so ``clip_frac`` metrics stay
+    meaningful).
+    """
+
+    groups: tuple[str, ...]  # static prefixes, aligned with factors rows
+    factors: jax.Array  # (G, B)
+
+    def group_index(self, path: str) -> int:
+        return group_index(self.groups, path)
+
+    def for_path(self, path: str) -> jax.Array:
+        return self.factors[self.group_index(path)]
+
+    @property
+    def representative(self) -> jax.Array:
+        return jnp.min(self.factors, axis=0)
+
+
+class ClipPolicy:
+    """Base class: the fixed-R defaults every policy inherits or overrides.
+
+    ``grouped`` policies receive ``path_norms2`` — per-param-path squared
+    norm contributions (every executor mode computes them per tap anyway) —
+    instead of collapsing everything into one scalar norm per sample.
+    """
+
+    name: str = "abstract"
+    grouped: bool = False
+
+    # -- state -------------------------------------------------------------
+    def init_state(self) -> dict[str, jax.Array]:
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    # -- factor stage -------------------------------------------------------
+    def clip_factors(
+        self,
+        norms: jax.Array,
+        state: dict[str, jax.Array],
+        *,
+        path_norms2: Optional[dict[str, jax.Array]] = None,
+    ) -> Any:
+        raise NotImplementedError
+
+    # -- adaptation ---------------------------------------------------------
+    def update(
+        self,
+        state: dict[str, jax.Array],
+        norms: jax.Array,
+        *,
+        key: Optional[jax.Array] = None,
+        mask: Optional[jax.Array] = None,
+    ) -> tuple[dict[str, jax.Array], PrivacyEvent]:
+        """Default: data-free no-op (step counter only).  jit-pure."""
+        del norms, key, mask
+        return {**state, "step": state["step"] + 1}, NO_RELEASE
+
+    def release_event(self) -> PrivacyEvent:
+        """The static per-step privacy bill of ``update`` (host-side)."""
+        return NO_RELEASE
+
+    # -- noise calibration ---------------------------------------------------
+    def sensitivity(self, state: dict[str, jax.Array]) -> Any:
+        """L2 bound on one sample's clipped contribution (scalar, traceable)."""
+        raise NotImplementedError
+
+    # -- identity ------------------------------------------------------------
+    def fingerprint(self) -> str:
+        """Stable identity folded into ClipPlan consensus (fleet gate)."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # logs/debugging
+        return f"<ClipPolicy {self.fingerprint()}>"

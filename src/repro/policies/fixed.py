@@ -1,0 +1,40 @@
+"""Fixed-threshold policy: the paper's flat R, extracted from the executor.
+
+This is byte-for-byte today's behavior — ``clip_fn(||g_i||, R)`` with a
+static threshold — expressed as a ``ClipPolicy`` so the factor stage has one
+seam for every policy.  The default when ``ClipConfig.policy`` is unset.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.functions import get_clip_fn
+from repro.policies.base import ClipPolicy
+
+
+class FixedPolicy(ClipPolicy):
+    name = "fixed"
+
+    def __init__(self, clip_norm: float = 1.0, clip_fn: str = "abadi"):
+        self.clip_norm = float(clip_norm)
+        self.clip_fn_name = clip_fn
+        self._clip_fn = get_clip_fn(clip_fn)
+
+    def clip_factors(
+        self,
+        norms: jax.Array,
+        state: dict[str, jax.Array],
+        *,
+        path_norms2: Optional[dict[str, jax.Array]] = None,
+    ) -> jax.Array:
+        del state, path_norms2
+        return self._clip_fn(norms, self.clip_norm)
+
+    def sensitivity(self, state: dict[str, jax.Array]) -> float:
+        del state
+        return self.clip_norm
+
+    def fingerprint(self) -> str:
+        return f"fixed:R={self.clip_norm:g},fn={self.clip_fn_name}"

@@ -1,0 +1,117 @@
+"""DP quantile-adaptive clipping — Andrew et al. 2021 (arXiv:1905.03871).
+
+Tracks a target quantile of the per-sample norm distribution instead of
+fixing R: each logical step releases the *noised* fraction of samples whose
+norm fell below the current threshold,
+
+    b_t = ( sum_i mask_i * I[||g_i|| <= R_t]  +  sigma_b * N(0,1) ) / B,
+
+and updates the threshold geometrically toward the target quantile ``q``::
+
+    R_{t+1} = R_t * exp(-lr * (b_t - q))
+
+The indicator count has L2 sensitivity 1 (one sample flips one indicator),
+so the release is a Poisson-subsampled Gaussian mechanism with noise
+multiplier ``sigma_b`` — composed into the accountant *per step* alongside
+the gradient mechanism (``PrivacyEvent(release_sigma=sigma_b)``; see
+``core.accountant.compute_epsilon``'s ``release_sigmas``).  R itself stays
+public because it is a function of noised releases only.
+
+``release_sigma = 0`` disables the noise (and the spend): useful for tests
+and non-private threshold tuning, but NOT differentially private — the
+engine will account zero extra cost for it.
+
+State: ``{"step": int32, "clip_norm": float32 scalar}`` — carried through
+the jitted train step and checkpointed, so adaptation survives preemption
+bit-identically.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.functions import get_clip_fn
+from repro.policies.base import NO_RELEASE, ClipPolicy, PrivacyEvent
+
+
+class QuantilePolicy(ClipPolicy):
+    name = "quantile"
+
+    def __init__(
+        self,
+        target_quantile: float = 0.5,
+        lr: float = 0.2,
+        release_sigma: float = 1.0,
+        init_clip_norm: float = 1.0,
+        clip_fn: str = "abadi",
+    ):
+        if not 0.0 < target_quantile < 1.0:
+            raise ValueError(f"target_quantile must be in (0, 1), got {target_quantile}")
+        if release_sigma < 0:
+            raise ValueError(f"release_sigma must be >= 0, got {release_sigma}")
+        self.target_quantile = float(target_quantile)
+        self.lr = float(lr)
+        self.release_sigma = float(release_sigma)
+        self.init_clip_norm = float(init_clip_norm)
+        self.clip_fn_name = clip_fn
+        self._clip_fn = get_clip_fn(clip_fn)
+
+    def init_state(self) -> dict[str, jax.Array]:
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "clip_norm": jnp.asarray(self.init_clip_norm, jnp.float32),
+        }
+
+    def clip_factors(
+        self,
+        norms: jax.Array,
+        state: dict[str, jax.Array],
+        *,
+        path_norms2: Optional[dict[str, jax.Array]] = None,
+    ) -> jax.Array:
+        del path_norms2
+        return self._clip_fn(norms, state["clip_norm"])
+
+    def update(
+        self,
+        state: dict[str, jax.Array],
+        norms: jax.Array,
+        *,
+        key: Optional[jax.Array] = None,
+        mask: Optional[jax.Array] = None,
+    ) -> tuple[dict[str, jax.Array], PrivacyEvent]:
+        r = state["clip_norm"]
+        below = (norms.astype(jnp.float32) <= r).astype(jnp.float32)
+        if mask is not None:
+            below = below * mask.astype(jnp.float32)
+        count = jnp.sum(below)
+        if self.release_sigma > 0:
+            if key is None:
+                raise ValueError(
+                    "quantile policy with release_sigma > 0 needs an rng key "
+                    "for the noised indicator release"
+                )
+            count = count + self.release_sigma * jax.random.normal(key, ())
+        # the denominator must be data-independent: the static physical batch
+        # size, not the (private) count of unmasked samples
+        b_t = count / norms.shape[0]
+        new_r = r * jnp.exp(-self.lr * (b_t - self.target_quantile))
+        new_state = {"step": state["step"] + 1, "clip_norm": new_r}
+        return new_state, self.release_event()
+
+    def release_event(self) -> PrivacyEvent:
+        if self.release_sigma > 0:
+            return PrivacyEvent(release_sigma=self.release_sigma)
+        return NO_RELEASE
+
+    def sensitivity(self, state: dict[str, jax.Array]) -> jax.Array:
+        return state["clip_norm"]
+
+    def fingerprint(self) -> str:
+        return (
+            f"quantile:q={self.target_quantile:g},lr={self.lr:g},"
+            f"sigma={self.release_sigma:g},R0={self.init_clip_norm:g},"
+            f"fn={self.clip_fn_name}"
+        )

@@ -88,6 +88,10 @@ class RankReport:
     fingerprint: str  # shape_fingerprint of this rank's discovered taps
     plan_json: Optional[str] = None  # leader ranks carry their measured plan
     step_cost_us: Optional[float] = None  # cheapest tuned-mode cost, if known
+    # ClipPolicy fingerprint this rank will run ("" = unspecified/legacy).
+    # Checked for uniformity like the shape fingerprint: a fleet mixing
+    # clipping policies produces mathematically different updates per rank.
+    policy: str = ""
 
     def to_payload(self) -> dict:
         return dataclasses.asdict(self)
@@ -102,6 +106,7 @@ class RankReport:
             step_cost_us=(
                 None if d.get("step_cost_us") is None else float(d["step_cost_us"])
             ),
+            policy=str(d.get("policy", "")),
         )
 
 
@@ -220,6 +225,20 @@ def agree(reports: Sequence[RankReport]) -> ClipPlan:
         raise PlanConsensusError(
             f"ranks disagree on the tap-shape fingerprint — they are not "
             f"running the same model: {detail}"
+        )
+
+    # one clipping policy everywhere: factors (and for quantile, the very
+    # threshold trajectory) differ per policy, so mixing them across ranks
+    # is mathematically divergent training, not a tuning detail
+    pols = {r.policy for r in ordered}
+    if len(pols) != 1:
+        detail = ", ".join(
+            f"process {r.process_index} ({r.device}): "
+            f"{r.policy or '<unspecified>'}"
+            for r in ordered
+        )
+        raise PlanConsensusError(
+            f"ranks disagree on the clipping-policy fingerprint: {detail}"
         )
 
     by_kind: dict[str, list[RankReport]] = {}
@@ -398,6 +417,7 @@ def verify_adopted(
     plan: ClipPlan,
     metas: Mapping[str, TapMeta],
     device: Optional[Any] = None,
+    policy_fingerprint: Optional[str] = None,
 ) -> None:
     """Loud, pre-trace validity gate for an imported/adopted plan.
 
@@ -437,6 +457,21 @@ def verify_adopted(
             f"{plan.consensus_hash()}; the artifact was edited after the "
             "fleet certified it"
         )
+    if (
+        policy_fingerprint is not None
+        and plan.policy_fingerprint
+        and plan.policy_fingerprint != policy_fingerprint
+    ):
+        # an unstamped plan ("" — pre-v4 artifact or engine-less tuner run)
+        # is accepted: branch measurements are policy-independent.  A plan
+        # STAMPED for a different policy means the fleet certified a
+        # different mechanism than this rank is about to run.
+        raise PlanConsensusError(
+            f"plan was agreed for clipping policy "
+            f"{plan.policy_fingerprint!r} but this rank runs "
+            f"{policy_fingerprint!r}; re-run the fleet agreement under one "
+            "policy"
+        )
 
 
 # -- the one-call driver --------------------------------------------------
@@ -447,13 +482,17 @@ def fleet_agree(
     gather_fn: Optional[GatherFn] = None,
     process_index: Optional[int] = None,
     device: Optional[str] = None,
+    policy_fingerprint: str = "",
 ) -> ClipPlan:
     """Phases 2+3: gather reports, agree, certify, validate — one call.
 
     ``plan`` is this rank's measured plan (None on non-leader ranks that
-    skipped measuring).  Returns the fleet-adopted plan, guaranteed
-    byte-identical on every rank that returns, and already verified against
-    this rank's ``metas``/device.  Raises ``PlanConsensusError`` otherwise.
+    skipped measuring).  ``policy_fingerprint`` is the clipping policy this
+    rank will run (``repro.policies``); every rank — leader or not — must
+    report the same one or the agreement aborts.  Returns the fleet-adopted
+    plan, guaranteed byte-identical on every rank that returns, and already
+    verified against this rank's ``metas``/device.  Raises
+    ``PlanConsensusError`` otherwise.
     """
     gather = gather_fn or default_gather
     idx = jax.process_index() if process_index is None else process_index
@@ -464,6 +503,7 @@ def fleet_agree(
         fingerprint=shape_fingerprint(metas),
         plan_json=None if plan is None else plan.to_json(),
         step_cost_us=None if plan is None else plan_step_cost_us(plan),
+        policy=policy_fingerprint,
     )
     payloads = gather(dict(report.to_payload(), phase="agree"))
     reports = [RankReport.from_payload(p) for p in payloads]
@@ -471,7 +511,9 @@ def fleet_agree(
     certify_fleet_hash(
         adopted, gather_fn=gather_fn, process_index=process_index
     )
-    verify_adopted(adopted, metas, device=dev)
+    verify_adopted(
+        adopted, metas, device=dev, policy_fingerprint=policy_fingerprint
+    )
     log.info(
         "fleet agreement: %d rank(s), %d device kind(s), leader process %s, "
         "hash %s", adopted.agreed_ranks, len(adopted.devices),

@@ -39,6 +39,18 @@ by ``consensus_hash()`` over everything *except* the provenance fields so
 stamping it is idempotent), the fleet size (``agreed_ranks``) and the
 measuring leader (``leader_process``).  v2 artifacts load with empty
 provenance (single-host plans, never agreed); v1 artifacts are rejected.
+
+Plan v4 adds the **policy fingerprint** (repro.policies): the stable
+identity of the clipping policy the run uses, stamped by
+``PrivacyEngine.tune`` and — deliberately — covered by the consensus hash,
+so a fleet whose ranks run different policies (different quantile targets,
+different layer groups) cannot certify one plan.  Branch decisions are
+policy-*independent* (both branches compute the same norms; tested), so
+``matches``/``overrides_for`` ignore the fingerprint: a cached plan tuned
+under one policy still serves another on a single host.  v2/v3 artifacts
+migrate with an empty fingerprint; a v3 artifact that carries an
+``agreed_hash`` will no longer re-verify (the hash covered the v3 schema)
+— re-run the fleet agreement, which is exactly the loud failure wanted.
 """
 from __future__ import annotations
 
@@ -56,11 +68,11 @@ from repro.utils.logging import get_logger
 
 log = get_logger("tuner.plan")
 
-PLAN_VERSION = 3
+PLAN_VERSION = 4
 # older versions from_json still understands (migrated with empty defaults
 # for the fields they predate); v1 predates the three-way branch maps and is
 # stale by construction
-COMPAT_VERSIONS = (2, PLAN_VERSION)
+COMPAT_VERSIONS = (2, 3, PLAN_VERSION)
 BRANCHES = ("ghost", "instantiate")
 TUNED_MODES = ("mixed_ghost", "bk_mixed")
 # ClipPlan fields that record consensus *provenance* rather than measurement:
@@ -180,6 +192,12 @@ class ClipPlan:
     arch: Optional[str] = None
     # (name, ghost, inst, bk_ghost, bk_inst, second_bwd) microseconds
     timings: tuple[tuple[str, float, float, float, float, float], ...] = ()
+    # clipping-policy identity (repro.policies.ClipPolicy.fingerprint()),
+    # stamped by PrivacyEngine.tune; "" on pre-v4 artifacts and plans built
+    # outside an engine.  Covered by consensus_hash() — a fleet cannot mix
+    # policies — but ignored by matches(): branch decisions are
+    # policy-independent, so the *measurements* stay valid across policies.
+    policy_fingerprint: str = ""
     # -- fleet consensus provenance (v3, repro.tuner.consensus) -----------
     # device strings that ratified this plan in a fleet agreement; matches()
     # accepts any of them (a mixed-kind fleet must trace ONE branch map, so
@@ -336,10 +354,12 @@ class ClipPlan:
     def from_json(cls, text: str) -> "ClipPlan":
         """Parse and validate a plan artifact; raises ``ValueError`` when stale.
 
-        v3 is current; v2 (pre-consensus) migrates with empty provenance —
-        its measurements are still sound on the device that took them.  v1
-        (pre-three-way) and unknown versions are rejected: their branch maps
-        know nothing about the bk bank decision.
+        v4 is current; v3 (pre-policy) and v2 (pre-consensus) migrate with
+        empty fingerprint/provenance — their measurements are still sound on
+        the device that took them, though a v3 ``agreed_hash`` no longer
+        re-verifies (the hash covered the v3 schema; re-run the agreement).
+        v1 (pre-three-way) and unknown versions are rejected: their branch
+        maps know nothing about the bk bank decision.
         """
         d = json.loads(text)
         version = int(d.get("version", 0))
@@ -365,6 +385,7 @@ class ClipPlan:
                 (str(n), float(g), float(i), float(bg), float(bi), float(sb))
                 for n, g, i, bg, bi, sb in d.get("timings", ())
             ),
+            policy_fingerprint=str(d.get("policy_fingerprint", "")),
             devices=tuple(str(x) for x in d.get("devices", ())),
             agreed_hash=d.get("agreed_hash"),
             agreed_ranks=d.get("agreed_ranks"),

@@ -31,7 +31,12 @@ from repro.tuner.consensus import (
     plan_step_cost_us,
     verify_adopted,
 )
-from repro.tuner.plan import ClipPlan, device_string, shape_fingerprint
+from repro.tuner.plan import (
+    PLAN_VERSION,
+    ClipPlan,
+    device_string,
+    shape_fingerprint,
+)
 
 from helpers import max_tree_diff
 
@@ -542,7 +547,7 @@ def test_v2_plan_migrates_with_empty_provenance():
     for f in ("devices", "agreed_hash", "agreed_ranks", "leader_process"):
         d.pop(f, None)
     v2 = ClipPlan.from_json(json.dumps(d))
-    assert v2.version == 3
+    assert v2.version == PLAN_VERSION
     assert v2.devices == () and v2.agreed_hash is None
     assert v2.agreed_ranks is None and v2.leader_process is None
     # measurements survive the migration byte-for-byte

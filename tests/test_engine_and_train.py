@@ -65,6 +65,31 @@ def test_train_cli_resume_and_fault_injection(tmp_path):
     assert latest_step(tmp_path) == 8
 
 
+def test_train_cli_resume_from_pre_policy_checkpoint(tmp_path):
+    """A checkpoint written before the policies subsystem (no state["policy"]
+    subtree) must resume: the missing policy state is filled with init."""
+    import numpy as np
+
+    from repro.launch.train import main
+
+    base = [
+        "--arch", "yi-6b", "--reduced", "--batch", "2", "--seq", "16",
+        "--ckpt-dir", str(tmp_path), "--log-every", "2",
+        "--clip-policy", "quantile",
+    ]
+    assert main(base + ["--steps", "2"]) == 0
+    # simulate a legacy artifact: strip the policy/* leaves in place
+    path = tmp_path / "step_2.npz"
+    with np.load(path) as z:
+        legacy = {k: z[k] for k in z.files if not k.startswith("policy/")}
+    np.savez(path, **legacy)
+    assert main(base + ["--steps", "4", "--resume"]) == 0
+    with np.load(tmp_path / "step_4.npz") as z:
+        # the filled-in policy state adapted over the resumed steps
+        assert "policy/clip_norm" in z.files
+        assert int(z["policy/step"]) == 2
+
+
 def test_train_cli_poisson(tmp_path):
     from repro.launch.train import main
 
