@@ -1,0 +1,88 @@
+"""Kernel-dispatch benchmark: the three clipping hot ops, per impl.
+
+Times every *available* implementation of each dispatch op
+(repro.kernels.dispatch) on representative clipping shapes — the dense
+ghost norm, the index-equality embedding ghost norm, and both psg
+bank-contraction entry points.  On TPU this races Pallas against XLA (the
+same comparison the tuner runs per tap, ``measure_kernels``); elsewhere
+only the XLA path is timed — interpreted Pallas timings would be noise,
+not signal.  Rows land in ``BENCH_kernels.json`` so the kernel trajectory
+accumulates in ``benchmarks/history/`` next to the mode and policy
+trajectories.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.kernels import dispatch
+
+# (label, N, T, D, p): a conv-ish mid tap and an lm_head-ish ghost tap
+SHAPES = [
+    ("conv_mid", 16, 196, 288, 64),
+    ("lm_head", 8, 128, 256, 512),
+]
+
+
+def run(fast: bool = True):
+    rows = []
+    impls = dispatch.available_impls()
+    for si, (label, n, t, d, p) in enumerate(SHAPES):
+        ks = jax.random.split(jax.random.PRNGKey(si), 4)
+        a = jax.random.normal(ks[0], (n, t, d))
+        g = jax.random.normal(ks[1], (n, t, p))
+        c = jax.random.uniform(ks[2], (n,))
+        ids = jax.random.randint(ks[3], (n, t), 0, 1000).astype(jnp.float32)
+        w = jnp.broadcast_to(c[:, None], (n, t)).reshape(1, n * t)
+        psg = a.reshape(n, t * d)
+
+        # every operand is a traced argument of the jitted fn — a closed-over
+        # constant would be folded by XLA and the timing would measure
+        # dispatch overhead, not the kernel
+        per_op = {
+            "ghost_norm": (
+                lambda impl: jax.jit(
+                    lambda x, y: dispatch.ghost_norm_sq(x, y, impl=impl)
+                ),
+                (a, g),
+            ),
+            "embedding_ghost_norm": (
+                lambda impl: jax.jit(
+                    lambda i, y: dispatch.embedding_ghost_norm_sq(
+                        i, y, impl=impl
+                    )
+                ),
+                (ids, g),
+            ),
+            "book_contract": (
+                lambda impl: jax.jit(
+                    lambda x, y, ww: dispatch.book_weighted_grad(
+                        x.reshape(1, n * t, d), y.reshape(1, n * t, p), ww,
+                        impl=impl,
+                    )
+                ),
+                (a, g, w),
+            ),
+            "psg_contract": (
+                lambda impl: jax.jit(
+                    lambda x, cc: dispatch.psg_contract(x, cc, impl=impl)
+                ),
+                (psg, c),
+            ),
+        }
+        for op, (make, args) in per_op.items():
+            per_impl = {}
+            for impl in impls:
+                sec = time_fn(make(impl), *args, iters=2 if fast else 5)
+                per_impl[impl] = sec * 1e6
+                rows.append((f"kernels_{label}_{op}_{impl}", sec * 1e6,
+                             f"N={n};T={t};D={d};p={p}"))
+            if len(per_impl) > 1:
+                winner = min(sorted(per_impl), key=per_impl.get)
+                rows.append((
+                    f"kernels_{label}_{op}_winner", 0.0,
+                    f"impl={winner};speedup="
+                    f"{max(per_impl.values()) / max(min(per_impl.values()), 1e-9):.3f}",
+                ))
+    return rows

@@ -27,6 +27,7 @@ def main() -> None:
 
     from benchmarks import (
         fig3_memory_curve,
+        kernels,
         modes,
         policies,
         roofline,
@@ -40,6 +41,7 @@ def main() -> None:
     benches = {
         "table1": lambda: table1_complexity.run(),
         "table3": lambda: table3_decision.run(),
+        "kernels": lambda: kernels.run(fast=args.fast),
         "table4": lambda: table4_time_memory.run(batch=32 if args.fast else 64),
         "table5": lambda: table5_accuracy.run(steps=10 if args.fast else 30),
         "table7": lambda: table7_max_batch.run(),

@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Render benchmarks/history/*.json into a markdown trend dashboard.
+
+The tier-1 gate archives every bench artifact as
+``benchmarks/history/<sha>-BENCH_<name>.json`` (a list of
+``{name, us_per_call, derived}`` rows).  This script folds that directory
+into ``benchmarks/history/DASHBOARD.md``: one table per benchmark, one row
+per git SHA (oldest first, ordered by this checkout's history where
+possible), one column per metric — step times in ms, plus whatever the
+``derived`` field carries (peak memory, ratios).  Commit the regenerated
+dashboard with each PR so the perf trajectory is reviewable in-repo, not
+buried in CI artifact retention.
+
+    python scripts/bench_dashboard.py [--history-dir benchmarks/history]
+                                      [--out DASHBOARD.md] [--check]
+
+``--check`` exits non-zero when the written dashboard differs from what the
+current artifacts render to — the CI guard against archiving new artifacts
+without regenerating.  Stdlib only; runs from scripts/tier1.sh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+# "nogit" is tier1.sh's stamp when git rev-parse fails — still rendered
+ARTIFACT = re.compile(r"^([0-9a-f]{6,40}|nogit)-BENCH_([A-Za-z0-9_]+)\.json$")
+
+
+def git_sha_order(repo: Path) -> dict[str, int]:
+    """{short-sha-prefix-able sha: age index} — 0 is the OLDEST commit."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-list", "--reverse", "HEAD"],
+            cwd=repo, capture_output=True, text=True, check=True,
+        ).stdout.split()
+    except (OSError, subprocess.CalledProcessError):
+        return {}
+    return {sha: i for i, sha in enumerate(out)}
+
+
+def load_history(history_dir: Path) -> dict[str, dict[str, list[dict]]]:
+    """{bench_name: {sha: rows}} from every artifact in the directory."""
+    out: dict[str, dict[str, list[dict]]] = {}
+    for path in sorted(history_dir.glob("*.json")):
+        m = ARTIFACT.match(path.name)
+        if not m:
+            continue
+        sha, bench = m.group(1), m.group(2)
+        try:
+            rows = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"WARNING: skipping unreadable {path.name}: {e}",
+                  file=sys.stderr)
+            continue
+        if isinstance(rows, list):
+            out.setdefault(bench, {})[sha] = rows
+    return out
+
+
+def _order_shas(shas: list[str], full_order: dict[str, int]) -> list[str]:
+    """Oldest first by git history; unknown SHAs (other checkouts) last,
+    alphabetically — deterministic regardless of file mtimes."""
+
+    def key(sha: str):
+        for full, idx in full_order.items():
+            if full.startswith(sha):
+                return (0, idx, sha)
+        return (1, 0, sha)
+
+    return sorted(shas, key=key)
+
+
+def _cell(row: dict) -> str:
+    us = float(row.get("us_per_call", 0.0))
+    derived = str(row.get("derived", "") or "")
+    parts = []
+    if us > 0.0:
+        parts.append(f"{us / 1000.0:.1f}ms")
+    if derived:
+        parts.append(derived)
+    return " ".join(parts) if parts else "-"
+
+
+def render(history: dict[str, dict[str, list[dict]]],
+           full_order: dict[str, int]) -> str:
+    lines = [
+        "# Benchmark trend dashboard",
+        "",
+        "Rendered from the SHA-stamped artifacts in this directory by",
+        "`scripts/bench_dashboard.py` (run by `scripts/tier1.sh` after each",
+        "gate; regenerate + commit with every PR).  Rows are commits, oldest",
+        "first; cells are `step-time derived` (times in ms).  Numbers are",
+        "machine-dependent — compare rows produced on the same host class.",
+        "",
+    ]
+    if not history:
+        lines += ["_No artifacts found._", ""]
+        return "\n".join(lines)
+    for bench in sorted(history):
+        per_sha = history[bench]
+        shas = _order_shas(list(per_sha), full_order)
+        metrics: list[str] = []
+        for sha in shas:
+            for row in per_sha[sha]:
+                name = str(row.get("name", ""))
+                if name and name not in metrics:
+                    metrics.append(name)
+        lines.append(f"## BENCH_{bench}")
+        lines.append("")
+        lines.append("| sha | " + " | ".join(metrics) + " |")
+        lines.append("|---" * (len(metrics) + 1) + "|")
+        for sha in shas:
+            by_name = {str(r.get("name", "")): r for r in per_sha[sha]}
+            cells = [
+                _cell(by_name[m]) if m in by_name else "-" for m in metrics
+            ]
+            lines.append(f"| {sha} | " + " | ".join(cells) + " |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--history-dir", default=str(REPO / "benchmarks" / "history"))
+    ap.add_argument("--out", default=None,
+                    help="output path (default: <history-dir>/DASHBOARD.md)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if the existing dashboard is out of date "
+                         "instead of writing")
+    args = ap.parse_args(argv)
+
+    history_dir = Path(args.history_dir)
+    out_path = Path(args.out) if args.out else history_dir / "DASHBOARD.md"
+    text = render(load_history(history_dir), git_sha_order(REPO)) + "\n"
+
+    if args.check:
+        current = out_path.read_text() if out_path.exists() else ""
+        if current != text:
+            print(f"ERROR: {out_path} is out of date; re-run "
+                  "scripts/bench_dashboard.py and commit the result",
+                  file=sys.stderr)
+            return 1
+        print(f"{out_path} is up to date")
+        return 0
+
+    out_path.write_text(text)
+    benches = len(load_history(history_dir))
+    print(f"wrote {out_path} ({benches} benchmark table(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

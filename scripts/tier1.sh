@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 smoke gate: the full pytest suite plus a fast benchmark pass that
 # exercises the complexity model (table1), the Eq-4.1 decision (table3), the
+# kernel-dispatch hot ops per impl (kernels -> BENCH_kernels.json), the
 # mode trajectory non_private / mixed_ghost / fused bk_mixed (modes ->
 # BENCH_modes.json), and the clipping-policy trajectory (policies ->
 # BENCH_policies.json), then a quantile-policy training smoke (R adapts
@@ -17,16 +18,19 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python -m pytest -x -q
-python -m benchmarks.run --fast --only table1,table3,modes,policies --out-dir "${BENCH_OUT:-.}"
+python -m benchmarks.run --fast --only table1,table3,kernels,modes,policies --out-dir "${BENCH_OUT:-.}"
 python scripts/check_docs_links.py
 python scripts/policy_smoke.py
 
 # accumulate the perf trajectory in-repo (SHA-stamped; commit with the PR)
 sha="$(git rev-parse --short HEAD 2>/dev/null || echo nogit)"
 mkdir -p benchmarks/history
-for f in BENCH_modes.json BENCH_policies.json; do
+for f in BENCH_modes.json BENCH_policies.json BENCH_kernels.json; do
   if [ -f "${BENCH_OUT:-.}/$f" ]; then
     cp "${BENCH_OUT:-.}/$f" "benchmarks/history/${sha}-$f"
     echo "# archived benchmarks/history/${sha}-$f" >&2
   fi
 done
+
+# fold the history dir into the markdown trend dashboard (commit with the PR)
+python scripts/bench_dashboard.py

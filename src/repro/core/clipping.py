@@ -134,6 +134,21 @@ def _plan_overrides(
     return plan.overrides_for(meta, mode=mode)
 
 
+def _plan_kernels(
+    plan: Optional[Any], meta: dict[str, TapMeta]
+) -> dict[str, dict[str, str]]:
+    """Validated per-tap kernel-impl choices from a tuner plan ({} if stale).
+
+    ``{tap: {op: "pallas" | "xla"}}`` routed to ``repro.kernels.dispatch``
+    through the executors; plans predating v5 (no ``kernels_for``) and
+    stale plans fall back to the dispatch backend default.
+    """
+    if plan is None:
+        return {}
+    fn = getattr(plan, "kernels_for", None)
+    return fn(meta) if fn is not None else {}
+
+
 def discover_meta(
     loss_with_ctx: LossFn, params: Any, batch: Any, clip: Optional[ClipRuntime] = None
 ) -> dict[str, TapMeta]:
@@ -250,6 +265,8 @@ class _NormState:
     acts: Optional[dict] = None  # explicit activations (taps engine / late)
     gs: Optional[dict] = None  # explicit tap cotangents
     meta: Optional[dict] = None
+    # per-tap kernel-impl choices from the plan ({} = dispatch defaults)
+    kernels: Optional[dict] = None
     per_sample_grads: Optional[Any] = None  # vmap oracle only
     # per-param-path squared norm contributions (grouped policies only):
     # {param_path: (B,)}, summing to norms2
@@ -444,8 +461,14 @@ class FusedExecutor(ClipExecutor):
         cfg = self.cfg
         meta = discover_meta(self.loss, params, batch, clip=self.base_runtime)
         overrides = _plan_overrides(cfg.plan, meta, cfg.mode)
+        kernel_map = _plan_kernels(cfg.plan, meta)
         runtime = dataclasses.replace(
-            self.base_runtime, overrides=tuple(sorted(overrides.items()))
+            self.base_runtime,
+            overrides=tuple(sorted(overrides.items())),
+            kernels=tuple(
+                (name, tuple(sorted(ks.items())))
+                for name, ks in sorted(kernel_map.items())
+            ),
         )
         zs0 = {
             name: fused_mod.make_bank_zeros(
@@ -481,6 +504,7 @@ class FusedExecutor(ClipExecutor):
                     mode=cfg.mode, decision_by=cfg.decision_by,
                     ghost_block=cfg.ghost_block, inst_block_d=cfg.inst_block_d,
                     override=overrides.get(name),
+                    kernels=kernel_map.get(name),
                 )
             norms2 = norms2 + n
             if path_norms2 is not None:
@@ -491,6 +515,7 @@ class FusedExecutor(ClipExecutor):
         return _NormState(
             losses=losses, norms2=norms2, pull=pull, banks=banks,
             acts=acts, gs=gs_late, meta=meta, path_norms2=path_norms2,
+            kernels=kernel_map,
         )
 
     def _weighted_grads(self, st, c, params):
@@ -506,10 +531,14 @@ class FusedExecutor(ClipExecutor):
         # group's factors.
         def ws_fn(name, m, param_shape):
             cw = c.for_path(m.param_path) if grouped else c
+            kernels = (st.kernels or {}).get(name)
             if m.fused:
-                return ghost.bank_weighted_grads(m, st.banks[name], cw, param_shape)
+                return ghost.bank_weighted_grads(
+                    m, st.banks[name], cw, param_shape, kernels=kernels
+                )
             return ghost.tap_weighted_grads(
-                m, st.acts.get(name), st.gs[name], cw, param_shape
+                m, st.acts.get(name), st.gs[name], cw, param_shape,
+                kernels=kernels,
             )
 
         return _assemble_bk_grads(st.meta, params, ws_fn)
@@ -530,6 +559,7 @@ class TapsExecutor(ClipExecutor):
         cfg = self.cfg
         meta = discover_meta(self.loss, params, batch)
         overrides = _plan_overrides(cfg.plan, meta, self.branch_mode)
+        kernel_map = _plan_kernels(cfg.plan, meta)
         taps0 = make_zero_taps(meta)
 
         def f(p, taps):
@@ -552,6 +582,7 @@ class TapsExecutor(ClipExecutor):
                 mode=self.branch_mode, decision_by=cfg.decision_by,
                 ghost_block=cfg.ghost_block, inst_block_d=cfg.inst_block_d,
                 override=overrides.get(name),
+                kernels=kernel_map.get(name),
             )
             norms2 = norms2 + n
             if path_norms2 is not None:
@@ -561,7 +592,7 @@ class TapsExecutor(ClipExecutor):
                 )
         return _NormState(
             losses=losses, norms2=norms2, pull=pull, acts=acts, gs=gs,
-            meta=meta, path_norms2=path_norms2,
+            meta=meta, path_norms2=path_norms2, kernels=kernel_map,
         )
 
     def _weighted_grads(self, st, c, params):
@@ -575,7 +606,8 @@ class TapsExecutor(ClipExecutor):
             st.meta, params,
             lambda name, m, shape: ghost.tap_weighted_grads(
                 m, st.acts.get(name), st.gs[name],
-                c.for_path(m.param_path) if grouped else c, shape
+                c.for_path(m.param_path) if grouped else c, shape,
+                kernels=(st.kernels or {}).get(name),
             ),
         )
 

@@ -58,6 +58,8 @@ class ProbeSpec:
     ghost_block: int = 512
     inst_block_d: int = 8192
     override: Optional[str] = None  # tuner ClipPlan branch, wins over decide()
+    # measured (op, impl) kernel choices for this tap (repro.kernels.dispatch)
+    kernels: tuple[tuple[str, str], ...] = ()
 
 
 def bank_struct(
@@ -133,6 +135,7 @@ def make_probe(spec: ProbeSpec):
             ghost_block=spec.ghost_block,
             inst_block_d=spec.inst_block_d,
             override=spec.override,
+            kernels=dict(spec.kernels) if spec.kernels else None,
         )
         da = jnp.zeros(a.shape, a.dtype) if a is not None else None
         return g, da, bank

@@ -32,15 +32,44 @@ Canonical layouts (stack dims folded into the row dim N):
 from __future__ import annotations
 
 import math
-from typing import Optional
+from typing import Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.decision import decide
 from repro.core.taps import TapMeta
+from repro.kernels import dispatch
 from repro.kernels.ghost_norm import ops as gops
 from repro.nn.conv import unfold2d
+
+# Largest integer float32 represents exactly: the fused engine sends
+# embedding ids through the bank side channel as fp32 (cotangent pytrees
+# are float), so vocabs at/above this silently corrupt high token ids.
+MAX_EXACT_FP32_ID = 1 << 24
+
+# ``kernels`` arguments below: an optional per-tap {op: impl} map from a
+# tuner ClipPlan ("pallas" | "xla" per dispatch op); None defers to
+# repro.kernels.dispatch's backend default (pallas on TPU, xla elsewhere).
+KernelChoices = Optional[Mapping[str, str]]
+
+
+def _check_embedding_vocab(meta: TapMeta, where: str) -> None:
+    """Trace-time guard: oversized vocabs must not cross the fp32 channel.
+
+    ``meta.D`` is the vocab size for embedding taps (nn.module.Embedding
+    registers D=vocab).  Raising at trace time — before any id is cast —
+    beats silently training on corrupted indices >= 2^24.
+    """
+    if meta.D >= MAX_EXACT_FP32_ID:
+        raise ValueError(
+            f"embedding tap {meta.param_path!r} has vocab size {meta.D} >= "
+            f"2^24 ({MAX_EXACT_FP32_ID}): {where} carries token ids as "
+            "float32, which cannot represent ids that large exactly, so "
+            "high vocab indices would be silently corrupted. Run this model "
+            "on the explicit *_taps engine (ids stay integer) or shard the "
+            "embedding below 2^24 rows per tap."
+        )
 
 
 def _fold(meta: TapMeta, x: jax.Array, trailing: tuple[int, ...]) -> jax.Array:
@@ -80,13 +109,15 @@ def tap_norm_sq(
     inst_block_d: int = 8192,
     override: Optional[str] = None,
     include_bias: bool = True,
+    kernels: KernelChoices = None,
 ) -> jax.Array:
     """Per-sample squared norm contributions: (B,) fp32 (weight + bias).
 
     ``override`` forces the matmul branch (tuner ClipPlan); both branches
     compute the same norm, so it changes cost only, never the result.
     ``include_bias=False`` skips the bias term (book-keeping banks it
-    separately as ``psg_b`` and adds its norm from the bank).
+    separately as ``psg_b`` and adds its norm from the bank).  ``kernels``
+    picks the Pallas-vs-XLA impl per dispatch op (also cost-only).
     """
     g = g.astype(jnp.float32)
     total = jnp.zeros((meta.batch_size,), jnp.float32)
@@ -95,15 +126,23 @@ def tap_norm_sq(
         branch = decide(meta, mode=mode, by=decision_by, override=override)
         aa, gg = _canonical_ag(meta, a, g)
         if branch == "ghost":
-            rows = gops.ghost_norm_sq(aa, gg, block=ghost_block)
+            rows = dispatch.ghost_norm_sq(
+                aa, gg, block=ghost_block,
+                impl=dispatch.kernels_arg(kernels, "ghost_norm"),
+            )
         else:
             rows = gops.instantiated_norm_sq(aa, gg, block_d=inst_block_d)
         total = total + _per_sample(meta, rows)
     elif meta.kind == "embedding":
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            # fused engine: ids arrived through the fp32 side channel
+            _check_embedding_vocab(meta, "the per-sample norm stage")
         lead = math.prod(meta.stack_dims) if meta.stack_dims else 1
         ids = a.reshape(lead * meta.batch_size, meta.T)
         gg = g.reshape(lead * meta.batch_size, meta.T, meta.p)
-        rows = gops.embedding_ghost_norm_sq(ids, gg)
+        rows = dispatch.embedding_ghost_norm_sq(
+            ids, gg, impl=dispatch.kernels_arg(kernels, "embedding_ghost_norm")
+        )
         total = total + _per_sample(meta, rows)
     elif meta.kind == "scale":
         af = _fold(meta, a.astype(jnp.float32), (meta.T, meta.p))
@@ -230,6 +269,7 @@ def tap_bank(
     ghost_block: int = 512,
     inst_block_d: int = 8192,
     override: Optional[str] = None,
+    kernels: KernelChoices = None,
 ) -> dict[str, jax.Array]:
     """The fused probe's backward payload for one tap (per layer instance).
 
@@ -250,7 +290,7 @@ def tap_bank(
             "n": tap_norm_sq(
                 meta, a, g, mode=mode, decision_by=decision_by,
                 ghost_block=ghost_block, inst_block_d=inst_block_d,
-                override=override,
+                override=override, kernels=kernels,
             )
         }
 
@@ -270,17 +310,18 @@ def tap_bank(
             n = n + tap_norm_sq(
                 meta, a, g, mode="ghost", decision_by=decision_by,
                 ghost_block=ghost_block, inst_block_d=inst_block_d,
-                include_bias=False,
+                include_bias=False, kernels=kernels,
             )
     elif meta.kind == "embedding":
         # a is the fp32-cast ids (taps.Ctx casts before probing): exact for
-        # vocab indices below 2^24, and the only way integers survive the
-        # cotangent side channel
+        # vocab indices below 2^24 — guarded at trace time, since anything
+        # larger would silently corrupt high token ids in the bank
+        _check_embedding_vocab(meta, "the book-keeping bank")
         bank["a"], bank["g"] = a, g
         n = n + tap_norm_sq(
             meta, a, g, mode=mode, decision_by=decision_by,
             ghost_block=ghost_block, inst_block_d=inst_block_d,
-            include_bias=False,
+            include_bias=False, kernels=kernels,
         )
     else:
         psg = _small_psg(meta, a, g32)
@@ -326,31 +367,46 @@ def tap_weighted_grads(
     g: jax.Array,
     clip: jax.Array,  # (B,) clip factors C_i
     param_shape: tuple[int, ...],
+    kernels: KernelChoices = None,
 ) -> dict[str, jax.Array]:
-    """BK mode: weighted gradients sum_i C_i g_i as direct einsums.
+    """BK mode: weighted gradients sum_i C_i g_i, contracted directly.
 
-    Returns {param_path: grad, [bias_path: grad]} shaped like the params.
+    Matmul taps run the fused clip-and-contract stage through
+    ``dispatch.book_weighted_grad`` (the Pallas kernel on TPU scales
+    cotangent tiles in VMEM, so the ``C_i * g_i`` temporary never reaches
+    HBM; the XLA path is a single three-operand einsum).  Returns
+    {param_path: grad, [bias_path: grad]} shaped like the params.
     """
     out: dict[str, jax.Array] = {}
     lead = math.prod(meta.stack_dims) if meta.stack_dims else 1
     gdim = max(meta.n_groups, 1)
+    b = meta.batch_size
     cw = clip.astype(jnp.float32)
 
-    if meta.kind in ("matmul", "embedding", "scale", "bias"):
-        gw = g.astype(jnp.float32).reshape(lead, meta.batch_size, gdim, meta.T, meta.p)
+    if meta.kind in ("embedding", "scale", "bias"):
+        gw = g.astype(jnp.float32).reshape(lead, b, gdim, meta.T, meta.p)
         gw = gw * cw[None, :, None, None, None]
 
     if meta.kind == "matmul":
         if a is None:
             raise ValueError(f"matmul tap {meta.param_path} has no recorded activation")
         if meta.conv is not None:
-            a4 = a.reshape((lead * meta.batch_size,) + a.shape[-3:])
-            aa = unfold2d(a4, meta.conv).reshape(
-                lead, meta.batch_size, gdim, meta.T, meta.D
-            )
+            a4 = a.reshape((lead * b,) + a.shape[-3:])
+            aa = unfold2d(a4, meta.conv).reshape(lead, b, gdim, meta.T, meta.D)
         else:
-            aa = a.reshape(lead, meta.batch_size, gdim, meta.T, meta.D)
-        w = jnp.einsum("lbgtd,lbgtp->lgdp", aa.astype(jnp.float32), gw)
+            aa = a.reshape(lead, b, gdim, meta.T, meta.D)
+        gg = g.reshape(lead, b, gdim, meta.T, meta.p)
+        # canonical (M, R, .) book: rows = (B, T) folded, one row weight per
+        # (sample, position); layer/group instances ride the leading dim
+        a2 = aa.transpose(0, 2, 1, 3, 4).reshape(lead * gdim, b * meta.T, meta.D)
+        g2 = gg.transpose(0, 2, 1, 3, 4).reshape(lead * gdim, b * meta.T, meta.p)
+        w2 = jnp.broadcast_to(
+            jnp.broadcast_to(cw[:, None], (b, meta.T)).reshape(1, b * meta.T),
+            (lead * gdim, b * meta.T),
+        )
+        w = dispatch.book_weighted_grad(
+            a2, g2, w2, impl=dispatch.kernels_arg(kernels, "psg_contract")
+        ).reshape(lead, gdim, meta.D, meta.p)
         out[meta.param_path] = _finish_matmul_grad(meta, w, param_shape)
     elif meta.kind == "embedding":
         ids = a.reshape(-1)
@@ -391,34 +447,43 @@ def bank_weighted_grads(
     bank: dict[str, jax.Array],
     clip: jax.Array,  # (B,) clip factors C_i
     param_shape: tuple[int, ...],
+    kernels: KernelChoices = None,
 ) -> dict[str, jax.Array]:
     """Fused book-keeping gradient stage: sum_i C_i g_i from a probe bank.
 
     ``bank`` arrives with stack dims prepended by the scan (the probes emit
     per-layer payloads; ``lax.scan`` stacks them).  Ghost-banked taps replay
-    the explicit weighted einsum from the banked (a, g) book; psg-banked taps
-    contract the banked per-sample gradients with the clip factors directly.
+    the weighted book contraction from the banked (a, g) pair; psg-banked
+    taps contract the banked per-sample gradients with the clip factors
+    directly — both through ``repro.kernels.dispatch``.
     """
     if "g" in bank:
         a = bank["a"]
         if meta.kind == "embedding":
-            # ids crossed the side channel as fp32 (see tap_bank)
+            # ids crossed the side channel as fp32 (see tap_bank); exactness
+            # of the round-trip is guarded at trace time
+            _check_embedding_vocab(meta, "the banked-id round-trip")
             a = jnp.round(a).astype(jnp.int32)
-        return tap_weighted_grads(meta, a, bank["g"], clip, param_shape)
+        return tap_weighted_grads(
+            meta, a, bank["g"], clip, param_shape, kernels=kernels
+        )
 
     out: dict[str, jax.Array] = {}
     lead = math.prod(meta.stack_dims) if meta.stack_dims else 1
     b = meta.batch_size
     cw = clip.astype(jnp.float32)
+    impl = dispatch.kernels_arg(kernels, "psg_contract")
     # banked per-sample grads are already in the param's own layout:
     # (L..., B, *param) -> contract the batch dim against the clip factors
     psg = bank["psg"].reshape((lead, b) + psg_param_shape(meta))
-    w = jnp.einsum("lb...,b->l...", psg, cw)
+    w = dispatch.psg_contract(psg, cw, axis=1, impl=impl)
     out[meta.param_path] = w.reshape(param_shape)
 
     if "psg_b" in bank:
         psg_b = bank["psg_b"].reshape(lead, b, meta.p)
-        out[meta.bias_path] = jnp.einsum("lbp,b->lp", psg_b, cw).reshape(
+        out[meta.bias_path] = dispatch.psg_contract(
+            psg_b, cw, axis=1, impl=impl
+        ).reshape(
             meta.stack_dims + (meta.p,) if meta.stack_dims else (meta.p,)
         )
     return out

@@ -108,12 +108,22 @@ class ClipRuntime:
     # measured-cost branch overrides from a tuner ClipPlan, as sorted
     # (tap_name, branch) pairs (tuple: ClipRuntime must stay hashable)
     overrides: tuple[tuple[str, str], ...] = ()
+    # measured kernel-impl choices from a tuner ClipPlan, as sorted
+    # (tap_name, ((op, impl), ...)) pairs routed to repro.kernels.dispatch;
+    # empty = the dispatch backend default (pallas on TPU, xla elsewhere)
+    kernels: tuple[tuple[str, tuple[tuple[str, str], ...]], ...] = ()
 
     def override_for(self, name: str) -> Optional[str]:
         for tap_name, branch in self.overrides:
             if tap_name == name:
                 return branch
         return None
+
+    def kernels_for(self, name: str) -> tuple[tuple[str, str], ...]:
+        for tap_name, choices in self.kernels:
+            if tap_name == name:
+                return choices
+        return ()
 
 
 class Ctx:
@@ -219,6 +229,7 @@ class Ctx:
                         ghost_block=self.clip.ghost_block,
                         inst_block_d=self.clip.inst_block_d,
                         override=self.clip.override_for(full),
+                        kernels=self.clip.kernels_for(full),
                     )
                 )
                 s = probe(s, a_p, self.zs[full])

@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Custom-kernel layer for the paper's compute hot spots.  Each op lives in
+# its own package with <name>.py (Pallas TPU kernel), ops.py (portable
+# chunked-XLA path), and ref.py (pure-jnp oracle both are tested against):
+# ghost_norm/ (Eq. 2.7 ghost norms, dense + index-equality), psg_contract/
+# (book-keeping's fused clip-and-contract stage), flash_attention/.
+# dispatch.py routes the clipping hot ops between the Pallas and XLA
+# implementations — backend default or per-tap measured ClipPlan choice;
+# call sites never pick an implementation themselves.

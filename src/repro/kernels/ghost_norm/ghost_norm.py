@@ -19,6 +19,11 @@ The (i, j) upper triangle is skipped; off-diagonal tiles are weighted 2x
 
 VMEM budget per step: 4 operand tiles (bt x bf) + 2 scratch Grams
 (bt x bt f32); defaults (bt=256, bf=512) ~3.5 MiB.
+
+``embedding_ghost_norm_sq_pallas`` is the index-equality variant: the
+activation Gram is replaced by an equality mask built in registers from two
+(bt,) id tiles, so only the cotangent Gram needs MXU work and the (T, T)
+plane still never reaches HBM.
 """
 from __future__ import annotations
 
@@ -124,3 +129,82 @@ def ghost_norm_sq_pallas(
         ],
         interpret=interpret,
     )(a, a, g, g)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f", "interpret"))
+def embedding_ghost_norm_sq_pallas(
+    ids: jax.Array,  # (N, T) token ids (int, or fp32-cast ids < 2^24)
+    g: jax.Array,  # (N, T, p)
+    *,
+    block_t: int = 256,
+    block_f: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Index-equality ghost norm: out[n] = sum_{t,t'} [id_t == id_t'] (g_t . g_t').
+
+    Same (T, T)-tile structure as ``ghost_norm_sq_pallas`` with the
+    activation Gram replaced by an equality mask computed in registers from
+    the id tiles.  The two id operands are padded with *different* sentinels
+    (-1 / -2), so pad positions never match anything — real ids, the other
+    pad, or each other — and correctness does not ride on ``g``'s zero
+    padding.
+    """
+    n, t = ids.shape
+    from repro.kernels.ghost_norm.ops import pad_ids_pair
+
+    ids_i, ids_j = pad_ids_pair(ids, block_t)
+    g = _pad(_pad(g, 1, block_t), 2, block_f)
+    nb = g.shape[1] // block_t
+    nc = g.shape[2] // block_f
+
+    def kernel(idi_ref, idj_ref, gi_ref, gj_ref, o_ref, gg_acc):
+        i = pl.program_id(1)
+        j = pl.program_id(2)
+        c = pl.program_id(3)
+        live = j <= i  # upper triangle skipped (symmetry)
+
+        @pl.when(jnp.logical_and(c == 0, live))
+        def _init():
+            gg_acc[...] = jnp.zeros_like(gg_acc)
+
+        @pl.when(live)
+        def _acc_g():
+            gg_acc[...] += jax.lax.dot_general(
+                gi_ref[0].astype(jnp.float32), gj_ref[0].astype(jnp.float32),
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+        @pl.when(jnp.logical_and(c == nc - 1, live))
+        def _finalize():
+            eq = (
+                idi_ref[...].reshape(block_t, 1)
+                == idj_ref[...].reshape(1, block_t)
+            ).astype(jnp.float32)
+            weight = jnp.where(i == j, 1.0, 2.0).astype(jnp.float32)
+            contrib = weight * jnp.sum(eq * gg_acc[...])
+
+            @pl.when(jnp.logical_and(i == 0, j == 0))
+            def _first():
+                o_ref[0] = contrib
+
+            @pl.when(jnp.logical_or(i != 0, j != 0))
+            def _rest():
+                o_ref[0] += contrib
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n, nb, nb, nc),
+        in_specs=[
+            pl.BlockSpec((1, block_t), lambda ni, i, j, c: (ni, i)),
+            pl.BlockSpec((1, block_t), lambda ni, i, j, c: (ni, j)),
+            pl.BlockSpec((1, block_t, block_f), lambda ni, i, j, c: (ni, i, c)),
+            pl.BlockSpec((1, block_t, block_f), lambda ni, i, j, c: (ni, j, c)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda ni, i, j, c: (ni,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_t, block_t), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ids_i, ids_j, g, g)

@@ -6,9 +6,14 @@ product is reduced immediately, and the (T, T) matrices never exist in HBM.
 Symmetry halves the work: total = sum_i w_ii + 2 sum_{i<j} w_ij.
 
 The instantiate branch streams over fan-in blocks of the (D, p) per-sample
-gradient the same way.  On TPU the inner tile op is the Pallas kernel
-(``ghost_norm.py``); everywhere else these lax.scan versions lower to plain
-XLA and are used by the multi-pod dry-run.
+gradient the same way.
+
+These are the portable XLA paths: they lower to plain ``lax.scan`` on every
+backend and are what the multi-pod dry-run uses.  Whether the training hot
+path runs them or the Pallas TPU kernels (``ghost_norm.py``) is decided by
+``repro.kernels.dispatch`` — pallas on TPU by default, measured per tap by
+the tuner, recorded in the ClipPlan — NOT by anything in this module.
+Calling these functions directly always runs the XLA path.
 """
 from __future__ import annotations
 
@@ -30,8 +35,32 @@ def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+def pad_ids_pair(
+    ids: jax.Array, block: int
+) -> tuple[jax.Array, jax.Array]:
+    """Pad the two id operands of an index-equality Gram to a block multiple.
+
+    The left and right operands get *different* sentinel ids (-1 and -2), so
+    a pad position can never match a real id (vocab ids are non-negative),
+    the other operand's pad, or — on diagonal tiles — its own mirror.  This
+    makes the equality mask exactly zero at every padded position without
+    assuming anything about how the cotangent is padded.
+
+    Returns ``(ids_i, ids_j)``; when ``T`` is already a multiple of
+    ``block`` both are the input unchanged.
+    """
+    pad = (-ids.shape[1]) % block
+    if pad == 0:
+        return ids, ids
+    widths = ((0, 0), (0, pad))
+    return (
+        jnp.pad(ids, widths, constant_values=-1),
+        jnp.pad(ids, widths, constant_values=-2),
+    )
+
+
 def ghost_norm_sq(a: jax.Array, g: jax.Array, *, block: int = 512) -> jax.Array:
-    """Ghost norm (Eq. 2.7). a: (N, T, D), g: (N, T, p) -> (N,) fp32.
+    """Ghost norm (Eq. 2.7), chunked XLA path. a: (N, T, D), g: (N, T, p) -> (N,) fp32.
 
     Inputs stay in their storage dtype; slices are upcast per tile — an
     upfront fp32 copy of both operands would stay live through the whole
@@ -88,7 +117,7 @@ def instantiated_norm_sq(a: jax.Array, g: jax.Array, *, block_d: int = 4096) -> 
 
 
 def embedding_ghost_norm_sq(ids: jax.Array, g: jax.Array, *, block: int = 1024) -> jax.Array:
-    """Index-equality ghost norm. ids: (N, T) int, g: (N, T, p) -> (N,)."""
+    """Index-equality ghost norm, chunked XLA path. ids: (N, T), g: (N, T, p) -> (N,)."""
     n, t, _ = g.shape
     if t <= max(block, _DIRECT_T):
         gf = g.astype(jnp.float32)
@@ -96,13 +125,13 @@ def embedding_ghost_norm_sq(ids: jax.Array, g: jax.Array, *, block: int = 1024) 
         gram_g = jnp.einsum("ntp,nsp->nts", gf, gf)
         return jnp.einsum("nts,nts->n", eq, gram_g)
 
-    # Pad with two *different* sentinel ids so padding never matches anything.
-    pad = (-t) % block
-    if pad:
-        ids_i = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
-        g = jnp.pad(g, ((0, 0), (0, pad), (0, 0)))
-    else:
-        ids_i = ids
+    # Two *different* sentinel ids per operand (pad_ids_pair): pad positions
+    # match nothing — not real ids, not the other pad — so the equality mask
+    # is exactly zero there and correctness does not depend on g's zero
+    # padding (g is still zero-padded, but only as a don't-care).
+    ids_i, ids_j = pad_ids_pair(ids, block)
+    if ids_i.shape[1] != t:
+        g = jnp.pad(g, ((0, 0), (0, ids_i.shape[1] - t), (0, 0)))
     nb = ids_i.shape[1] // block
     ij = jnp.array([(i, j) for i in range(nb) for j in range(i + 1)], jnp.int32)
     wts = jnp.array([1.0 if i == j else 2.0 for i in range(nb) for j in range(i + 1)])
@@ -110,7 +139,7 @@ def embedding_ghost_norm_sq(ids: jax.Array, g: jax.Array, *, block: int = 1024) 
     def body(acc, pair):
         (i, j), w = pair
         id_i = lax.dynamic_slice_in_dim(ids_i, i * block, block, 1)
-        id_j = lax.dynamic_slice_in_dim(ids_i, j * block, block, 1)
+        id_j = lax.dynamic_slice_in_dim(ids_j, j * block, block, 1)
         g_i = lax.dynamic_slice_in_dim(g, i * block, block, 1).astype(jnp.float32)
         g_j = lax.dynamic_slice_in_dim(g, j * block, block, 1).astype(jnp.float32)
         eq = (id_i[:, :, None] == id_j[:, None, :]).astype(jnp.float32)

@@ -1,0 +1,29 @@
+"""Portable XLA paths for the psg bank-contraction stage (jit-ready).
+
+These are the everywhere-else counterparts of the Pallas kernels in
+``psg_contract.py``; ``repro.kernels.dispatch`` routes between the two.
+The book contraction is handed to XLA as a single three-operand einsum so
+the contraction order is the compiler's choice — on most backends that
+still materializes the weighted cotangent ``g * c`` (the temporary the
+Pallas kernel exists to avoid); the complexity is identical, only the HBM
+traffic differs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def book_weighted_grad(a: jax.Array, g: jax.Array, w: jax.Array) -> jax.Array:
+    """sum_r w[m,r] a[m,r]^T g[m,r].  a: (M,R,D), g: (M,R,p), w: (M,R) -> (M,D,p)."""
+    return jnp.einsum(
+        "mrd,mrp,mr->mdp",
+        a.astype(jnp.float32), g.astype(jnp.float32), w.astype(jnp.float32),
+    )
+
+
+def psg_contract(psg: jax.Array, c: jax.Array) -> jax.Array:
+    """sum_n c[n] * psg[n].  psg: (N, F), c: (N,) -> (F,) float32."""
+    return jnp.einsum(
+        "nf,n->f", psg.astype(jnp.float32), c.astype(jnp.float32)
+    )

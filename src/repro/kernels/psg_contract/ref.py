@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the psg bank contraction (book-keeping stage).
+
+These deliberately materialize the weighted cotangent — the memory-hungry
+formulation the fused kernel avoids — and are what the chunked XLA ops and
+the Pallas kernels are checked against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def book_weighted_grad_ref(a: jax.Array, g: jax.Array, w: jax.Array) -> jax.Array:
+    """Scale-then-contract: (g * w) materialized, then the (a, g) einsum."""
+    gw = g.astype(jnp.float32) * w.astype(jnp.float32)[..., None]
+    return jnp.einsum("mrd,mrp->mdp", a.astype(jnp.float32), gw)
+
+
+def psg_contract_ref(psg: jax.Array, c: jax.Array) -> jax.Array:
+    """Row-scaled bank summed over samples."""
+    scaled = psg.astype(jnp.float32) * c.astype(jnp.float32)[:, None]
+    return jnp.sum(scaled, axis=0)

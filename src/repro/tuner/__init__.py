@@ -27,7 +27,9 @@ from repro.tuner.measure import (
     build_plan,
     close_physical_batch_loop,
     measure_branches,
+    measure_kernels,
     measure_tap,
+    measure_tap_kernels,
     remeasure_at_batch,
 )
 from repro.tuner.plan import (
@@ -53,7 +55,9 @@ __all__ = [
     "build_plan",
     "close_physical_batch_loop",
     "measure_branches",
+    "measure_kernels",
     "measure_tap",
+    "measure_tap_kernels",
     "remeasure_at_batch",
     "derive_accumulation",
     "find_max_physical_batch",

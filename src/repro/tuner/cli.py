@@ -211,6 +211,23 @@ def main(argv=None) -> int:
               f"{t.second_bwd_us:>8.1f} {analytic:>11s} {measured:>11s} "
               f"{bk_map.get(name, '-'):>11s}{flag}")
     print(f"\n{flips}/{len(branch_map)} taps flip vs the analytic rule")
+    kmap = plan.kernel_map()
+    if kmap:
+        # describe the PLAN's map, not the local backend: the plan may have
+        # been imported from another device kind (its map then only applies
+        # there — ClipPlan.kernels_for)
+        if any(i != "xla" for ks in kmap.values() for i in ks.values()):
+            for name in sorted(kmap):
+                print(f"kernel impls {name}: " + "  ".join(
+                    f"{op}={impl}" for op, impl in sorted(kmap[name].items())))
+        elif plan.device.startswith("tpu:"):
+            # both impls were raced on the measuring TPU and xla swept —
+            # the signal that the Pallas kernels are underperforming there
+            print("kernel impls: xla everywhere (pallas raced and lost "
+                  "every op)")
+        else:
+            print("kernel impls: xla everywhere (single-impl device, "
+                  "nothing raced)")
     print(f"measured per-step clipping cost: mixed_ghost="
           f"{plan.mode_cost_us('mixed_ghost'):.1f}us  "
           f"bk_mixed={plan.mode_cost_us('bk_mixed'):.1f}us  "

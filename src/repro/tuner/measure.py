@@ -23,9 +23,17 @@ answer {ghost+2nd-bwd, instantiate+2nd-bwd, book-keeping-einsum} and emit a
 branch map per mode (plan.branches / plan.bk_branches) plus a measured
 ``recommended_mode``.
 
-Only matmul taps are measured.  Embedding / scale / bias / dw_conv taps have
-a single viable branch (decision.decide's forced cases) and are never
-overridden.
+On TPU each hot op additionally has two *implementations* — the Pallas
+kernel and the chunked-XLA lowering (repro.kernels.dispatch) — so before
+the branches are timed, ``measure_kernels`` races the impls per tap
+(ghost norm + psg bank contraction for matmuls, the index-equality ghost
+norm for embeddings) and the branch timings are then taken *under the
+winning impls*, which are recorded in the plan's v5 ``kernels`` map.  Off
+TPU there is exactly one production impl (xla), recorded without timing.
+
+Only matmul taps get branch timings.  Embedding / scale / bias / dw_conv
+taps have a single viable branch (decision.decide's forced cases) and are
+never overridden — embeddings still get a kernel-impl measurement.
 """
 from __future__ import annotations
 
@@ -38,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.core.decision import decide
 from repro.core.taps import TapMeta
+from repro.kernels import dispatch
 from repro.kernels.ghost_norm import ops as gops
 from repro.tuner.plan import (
     ClipPlan,
@@ -99,17 +108,112 @@ def _tap_rows(meta: TapMeta, max_rows: Optional[int]) -> int:
     return n
 
 
-def measure_tap(meta: TapMeta, cfg: MeasureConfig = MeasureConfig()) -> Optional[TapTiming]:
+# dispatch ops with a measurable impl choice, per tap kind; scale / bias /
+# dw_conv taps bank tiny per-sample grads and keep the dispatch default
+KERNEL_OPS_BY_KIND = {
+    "matmul": ("ghost_norm", "psg_contract"),
+    "embedding": ("embedding_ghost_norm",),
+}
+
+
+def _book(x: jax.Array, y: jax.Array, cc: jax.Array, impl: Optional[str]):
+    """The fused book contraction as the engine runs it: (n,T,D) x (n,T,p)
+    rows folded to one (M=1, R=n*T) book, one row weight per (sample, t)."""
+    nn, tt, dd = x.shape
+    a2 = x.reshape(1, nn * tt, dd)
+    g2 = y.reshape(1, nn * tt, y.shape[-1])
+    w2 = jnp.broadcast_to(cc[:, None], (nn, tt)).reshape(1, nn * tt)
+    return dispatch.book_weighted_grad(a2, g2, w2, impl=impl)[0]
+
+
+def measure_tap_kernels(
+    meta: TapMeta, cfg: MeasureConfig = MeasureConfig()
+) -> dict[str, str]:
+    """Race Pallas vs XLA per dispatch op for one tap; return the winners.
+
+    ``{op: impl}`` for every op in ``KERNEL_OPS_BY_KIND[kind]`` ({} for
+    kinds with no dispatchable op).  Where only one impl is available
+    (everywhere but TPU) it is recorded without timing — the plan then
+    states the choice explicitly instead of leaving it to the backend
+    default at trace time.
+    """
+    ops_ = KERNEL_OPS_BY_KIND.get(meta.kind, ())
+    if not ops_:
+        return {}
+    avail = dispatch.available_impls()
+    if len(avail) == 1:
+        return {op: avail[0] for op in ops_}
+
+    n = _tap_rows(meta, cfg.max_rows)
+    key = jax.random.PRNGKey(cfg.seed)
+    ka, kg, kc = jax.random.split(key, 3)
+    out: dict[str, str] = {}
+
+    def race(op: str, make_fn, *args) -> None:
+        per_impl = {}
+        for impl in avail:
+            per_impl[impl] = time_us(
+                jax.jit(make_fn(impl)), *args,
+                repeats=cfg.repeats, warmup=cfg.warmup,
+            )
+        winner = min(sorted(per_impl), key=per_impl.get)
+        log.info("%s kernels: %s -> %s", op,
+                 " ".join(f"{i}={t:.1f}us" for i, t in sorted(per_impl.items())),
+                 winner)
+        out[op] = winner
+
+    if meta.kind == "matmul":
+        dtype = jnp.dtype(meta.s_dtype)
+        a = jax.random.normal(ka, (n, meta.T, meta.D), jnp.float32).astype(dtype)
+        g = jax.random.normal(kg, (n, meta.T, meta.p), jnp.float32)
+        c = jax.random.uniform(kc, (n,), jnp.float32)
+        race(
+            "ghost_norm",
+            lambda impl: lambda x, y: dispatch.ghost_norm_sq(
+                x, y, block=cfg.ghost_block, impl=impl
+            ),
+            a, g,
+        )
+        race(
+            "psg_contract",
+            lambda impl: lambda x, y, cc: _book(x, y, cc, impl),
+            a, g, c,
+        )
+    elif meta.kind == "embedding":
+        # the fused engine sends ids through the bank channel as fp32
+        # (core/taps.py) — time exactly that
+        vocab = min(meta.D, 1 << 24)
+        ids = jax.random.randint(ka, (n, meta.T), 0, vocab).astype(jnp.float32)
+        g = jax.random.normal(kg, (n, meta.T, meta.p), jnp.float32)
+        race(
+            "embedding_ghost_norm",
+            lambda impl: lambda i, y: dispatch.embedding_ghost_norm_sq(
+                i, y, impl=impl
+            ),
+            ids, g,
+        )
+    return out
+
+
+def measure_tap(
+    meta: TapMeta,
+    cfg: MeasureConfig = MeasureConfig(),
+    kernels: Optional[Mapping[str, str]] = None,
+) -> Optional[TapTiming]:
     """Time every branch of the three-way decision for one matmul tap.
 
     Returns a ``TapTiming`` with the five per-tap costs (ghost norm,
     instantiated norm, both book-keeping pipelines, and the tap's share of
     a second backward) measured on synthetic data of the tap's canonical
     shape, or ``None`` for non-matmul kinds, whose branch is forced by
-    ``decision.decide`` and never measured.
+    ``decision.decide`` and never measured.  ``kernels`` pins the
+    Pallas-vs-XLA impl per dispatch op (``measure_tap_kernels``'s winners)
+    so the branch comparison prices the kernels that will actually trace.
     """
     if meta.kind != "matmul":
         return None
+    k_ghost = dispatch.kernels_arg(kernels, "ghost_norm")
+    k_psg = dispatch.kernels_arg(kernels, "psg_contract")
     n = _tap_rows(meta, cfg.max_rows)
     key = jax.random.PRNGKey(cfg.seed)
     ka, kg, kw, kc = jax.random.split(key, 4)
@@ -124,7 +228,11 @@ def measure_tap(meta: TapMeta, cfg: MeasureConfig = MeasureConfig()) -> Optional
 
     # -- second-backward norm branches (both consume unfolded patches at
     # train time, so the shared im2col cost cancels out of THIS comparison)
-    ghost_fn = jax.jit(lambda x, y: gops.ghost_norm_sq(x, y, block=cfg.ghost_block))
+    ghost_fn = jax.jit(
+        lambda x, y: dispatch.ghost_norm_sq(
+            x, y, block=cfg.ghost_block, impl=k_ghost
+        )
+    )
     inst_fn = jax.jit(
         lambda x, y: gops.instantiated_norm_sq(x, y, block_d=cfg.inst_block_d)
     )
@@ -156,14 +264,16 @@ def measure_tap(meta: TapMeta, cfg: MeasureConfig = MeasureConfig()) -> Optional
         def bk_ghost(xraw, y, cc):
             aa = unfold2d(xraw, meta.conv).astype(jnp.float32)
             yy = y.reshape(n, meta.T, meta.p)
-            norms = gops.ghost_norm_sq(aa, yy, block=cfg.ghost_block)
-            wg = jnp.einsum("ntd,ntp->dp", aa, yy * cc[:, None, None])
+            norms = dispatch.ghost_norm_sq(
+                aa, yy, block=cfg.ghost_block, impl=k_ghost
+            )
+            wg = _book(aa, yy, cc, k_psg)
             return norms, wg
 
         def bk_inst(xraw, y, cc):
             psg = _matmul_psg(m1, xraw, y)
             norms = jnp.sum(jnp.square(psg).reshape(n, -1), axis=-1)
-            wg = jnp.einsum("n...,n->...", psg, cc)
+            wg = dispatch.psg_contract(psg, cc, impl=k_psg)
             return norms, wg
 
         bk_ghost_us = time_us(jax.jit(bk_ghost), a_raw, g_out, c,
@@ -172,15 +282,16 @@ def measure_tap(meta: TapMeta, cfg: MeasureConfig = MeasureConfig()) -> Optional
                              repeats=cfg.repeats, warmup=cfg.warmup)
     else:
         def bk_ghost(x, y, cc):
-            norms = gops.ghost_norm_sq(x, y, block=cfg.ghost_block)
-            xf = x.astype(jnp.float32)
-            wg = jnp.einsum("ntd,ntp->dp", xf, y * cc[:, None, None])
+            norms = dispatch.ghost_norm_sq(
+                x, y, block=cfg.ghost_block, impl=k_ghost
+            )
+            wg = _book(x.astype(jnp.float32), y, cc, k_psg)
             return norms, wg
 
         def bk_inst(x, y, cc):
             psg = jnp.einsum("ntd,ntp->ndp", x.astype(jnp.float32), y)
             norms = jnp.sum(jnp.square(psg).reshape(psg.shape[0], -1), axis=-1)
-            wg = jnp.einsum("ndp,n->dp", psg, cc)
+            wg = dispatch.psg_contract(psg, cc, impl=k_psg)
             return norms, wg
 
         bk_ghost_us = time_us(jax.jit(bk_ghost), a, g, c,
@@ -211,14 +322,43 @@ def _shape_key(name: str, meta: TapMeta) -> tuple:
                         for k, v in sig.items()))
 
 
-def measure_branches(
+def measure_kernels(
     metas: Mapping[str, TapMeta], cfg: MeasureConfig = MeasureConfig()
+) -> dict[str, dict[str, str]]:
+    """Per-tap kernel-impl winners, one measurement per unique shape.
+
+    Covers every tap whose kind has a dispatchable op (matmul, embedding);
+    same shape-signature dedupe as ``measure_branches`` and for the same
+    reason — identically-shaped layers must trace identical kernels.
+    """
+    by_shape: dict[tuple, dict[str, str]] = {}
+    out: dict[str, dict[str, str]] = {}
+    for name in sorted(metas):
+        meta = metas[name]
+        if meta.kind not in KERNEL_OPS_BY_KIND:
+            continue
+        key = _shape_key(name, meta)
+        choices = by_shape.get(key)
+        if choices is None:
+            choices = measure_tap_kernels(meta, cfg)
+            by_shape[key] = choices
+        if choices:
+            out[name] = choices
+    return out
+
+
+def measure_branches(
+    metas: Mapping[str, TapMeta],
+    cfg: MeasureConfig = MeasureConfig(),
+    kernels: Optional[Mapping[str, Mapping[str, str]]] = None,
 ) -> dict[str, TapTiming]:
     """One timing per *unique shape signature*, fanned out to all taps.
 
     Identically-shaped layers (every layer of a homogeneous stack) must get
     the same branch: measuring them independently multiplies profiling cost
     and lets timer noise encode jitter as per-layer "hardware truth".
+    ``kernels`` (``measure_kernels``'s winners) pins the impl each branch
+    timing runs under; None times the dispatch backend default.
     """
     by_shape: dict[tuple, TapTiming] = {}
     out: dict[str, TapTiming] = {}
@@ -229,7 +369,9 @@ def measure_branches(
         key = _shape_key(name, meta)
         timing = by_shape.get(key)
         if timing is None:
-            timing = measure_tap(meta, cfg)
+            timing = measure_tap(
+                meta, cfg, kernels=None if kernels is None else kernels.get(name)
+            )
             by_shape[key] = timing
             analytic = decide(meta, mode="mixed_ghost")
             mark = "" if analytic == timing.winner else "  (!= analytic %s)" % analytic
@@ -254,18 +396,37 @@ def _plan_fields(timings: Mapping[str, TapTiming]) -> dict:
     )
 
 
+def _kernel_rows(
+    kernels: Mapping[str, Mapping[str, str]]
+) -> tuple[tuple[str, str, str], ...]:
+    """Flatten {tap: {op: impl}} to the sorted triples ClipPlan stores."""
+    return tuple(
+        (name, op, impl)
+        for name in sorted(kernels)
+        for op, impl in sorted(kernels[name].items())
+    )
+
+
 def build_plan(
     metas: Mapping[str, TapMeta],
     *,
     measure: MeasureConfig = MeasureConfig(),
     arch: Optional[str] = None,
 ) -> ClipPlan:
-    """Profile every matmul tap and assemble the measured-cost ClipPlan."""
-    timings = measure_branches(metas, measure)
+    """Profile every matmul tap and assemble the measured-cost ClipPlan.
+
+    Kernel impls are raced first (``measure_kernels``); the branch timings
+    are then taken under the winners, and both land in the plan — the
+    branch maps drive ghost-vs-instantiate, the v5 ``kernels`` map drives
+    Pallas-vs-XLA at trace time.
+    """
+    kernels = measure_kernels(metas, measure)
+    timings = measure_branches(metas, measure, kernels=kernels)
     return ClipPlan(
         fingerprint=shape_fingerprint(metas),
         device=device_string(),
         arch=arch,
+        kernels=_kernel_rows(kernels),
         **_plan_fields(timings),
     )
 
@@ -292,6 +453,10 @@ def remeasure_at_batch(
     *training* graph, not per-tap psg instantiation at full rows): taps whose
     full-batch measurement would exceed it are clamped to the largest batch
     that fits, which preserves the comparison since timings scale ~linearly.
+
+    The plan's recorded kernel winners are kept, not re-raced: the re-timed
+    branches run under them (kernel crossover is far less batch-sensitive
+    than the branch decision — both impls scale with the same terms).
     """
     rebatched = {}
     clamped = 0
@@ -310,7 +475,7 @@ def remeasure_at_batch(
                  "respect the %.1fGB profiling cap", clamped, physical_batch,
                  cap_bytes / 1024**3)
     cfg_full = dataclasses.replace(cfg, max_rows=None)
-    timings = measure_branches(rebatched, cfg_full)
+    timings = measure_branches(rebatched, cfg_full, kernels=plan.kernel_map())
     flips = sum(
         1 for name, b in plan.branches if timings.get(name) and
         timings[name].winner != b

@@ -51,6 +51,16 @@ under one policy still serves another on a single host.  v2/v3 artifacts
 migrate with an empty fingerprint; a v3 artifact that carries an
 ``agreed_hash`` will no longer re-verify (the hash covered the v3 schema)
 — re-run the fleet agreement, which is exactly the loud failure wanted.
+
+Plan v5 adds the **kernel map** (``kernels``): per tap and dispatch op
+(repro.kernels.dispatch: ghost_norm / embedding_ghost_norm / psg_contract),
+the measured Pallas-vs-XLA winner.  Like the branch maps it moves cost and
+never math, and like the policy fingerprint it is covered by the consensus
+hash — a fleet must trace one kernel per tap everywhere, so mixed kernel
+choices cannot certify.  v2–v4 artifacts migrate with an empty map (the
+dispatch backend default applies); a v4 ``agreed_hash`` no longer
+re-verifies for the same schema-coverage reason as v3 → v4, and the fleet
+must re-agree.
 """
 from __future__ import annotations
 
@@ -68,12 +78,17 @@ from repro.utils.logging import get_logger
 
 log = get_logger("tuner.plan")
 
-PLAN_VERSION = 4
+PLAN_VERSION = 5
 # older versions from_json still understands (migrated with empty defaults
 # for the fields they predate); v1 predates the three-way branch maps and is
 # stale by construction
-COMPAT_VERSIONS = (2, 3, PLAN_VERSION)
+COMPAT_VERSIONS = (2, 3, 4, PLAN_VERSION)
 BRANCHES = ("ghost", "instantiate")
+# kernel ops / impl values a v5 plan may record per tap; mirror
+# repro.kernels.dispatch.OPS / .IMPLS (duplicated so plan validation stays
+# free of kernel imports — tests/test_kernels.py asserts they agree)
+KERNEL_OPS = ("ghost_norm", "embedding_ghost_norm", "psg_contract")
+KERNEL_IMPLS = ("pallas", "xla")
 TUNED_MODES = ("mixed_ghost", "bk_mixed")
 # ClipPlan fields that record consensus *provenance* rather than measurement:
 # excluded from consensus_hash() so that stamping the agreement outcome onto
@@ -175,6 +190,12 @@ class ClipPlan:
     # serves the second-backward modes, ``bk_branches`` serves bk_mixed.
     branches: tuple[tuple[str, str], ...] = ()
     bk_branches: tuple[tuple[str, str], ...] = ()
+    # (tap_name, dispatch_op, impl) triples, sorted — the measured
+    # Pallas-vs-XLA winner per clipping hot op (repro.kernels.dispatch).
+    # Like the branch maps: pure cost, never math; covered by the consensus
+    # hash so a fleet cannot mix kernel choices.  Empty on pre-v5 artifacts
+    # (the dispatch backend default applies).
+    kernels: tuple[tuple[str, str, str], ...] = ()
     # Table-7 measurement reused as a runtime feature: the largest physical
     # microbatch that fits the memory budget, and the accumulation the tuning
     # run derived for its logical batch (informational — consumers re-derive
@@ -216,6 +237,13 @@ class ClipPlan:
         """The per-tap branch decisions as a dict; ``mode`` picks which map."""
         return dict(self.bk_branches if mode == "bk_mixed" else self.branches)
 
+    def kernel_map(self) -> dict[str, dict[str, str]]:
+        """The recorded kernel choices as ``{tap: {op: impl}}``."""
+        out: dict[str, dict[str, str]] = {}
+        for name, op, impl in self.kernels:
+            out.setdefault(name, {})[op] = impl
+        return out
+
     @property
     def device_kind(self) -> str:
         """The accelerator kind (``device_string`` minus the platform prefix)."""
@@ -237,6 +265,7 @@ class ClipPlan:
             d.pop(f, None)
         d["branches"] = [list(b) for b in self.branches]
         d["bk_branches"] = [list(b) for b in self.bk_branches]
+        d["kernels"] = [list(k) for k in self.kernels]
         d["timings"] = [list(t) for t in self.timings]
         return json.dumps(d, sort_keys=True, separators=(",", ":")).encode()
 
@@ -294,6 +323,37 @@ class ClipPlan:
         branches = self.bk_branches if mode == "bk_mixed" else self.branches
         return {name: b for name, b in branches if name in metas}
 
+    def kernels_for(
+        self, metas: Mapping[str, TapMeta], device: Optional[Any] = None
+    ) -> dict[str, dict[str, str]]:
+        """Per-tap kernel-impl choices, or {} (dispatch default) when stale.
+
+        STRICTER than ``overrides_for``: branch overrides are
+        backend-portable cost hints (``matches`` accepts any *ratifying*
+        device of a fleet agreement), but a kernel impl is backend-specific
+        — a ``pallas`` winner measured on the fleet's TPU kind must never
+        be applied by a ratifying GPU/CPU rank, where it would silently
+        trace the interpreter into the production step.  So the map only
+        applies on the device kind that measured it; every other kind
+        (ratifying or not) falls back to its own dispatch backend default,
+        which is deterministic per kind.
+        """
+        if not self.kernels:
+            return {}
+        if (
+            self.device != device_string(device)
+            or self.fingerprint != shape_fingerprint(metas)
+        ):
+            log.warning(
+                "ClipPlan kernel map dropped (measured on %s for fingerprint "
+                "%s); falling back to the dispatch backend default",
+                self.device, self.fingerprint,
+            )
+            return {}
+        return {
+            name: ks for name, ks in self.kernel_map().items() if name in metas
+        }
+
     def tap_timings(self) -> dict[str, TapTiming]:
         """The stored timing rows re-hydrated as ``TapTiming`` per tap."""
         return {
@@ -346,6 +406,7 @@ class ClipPlan:
         d = dataclasses.asdict(self)
         d["branches"] = [list(b) for b in self.branches]
         d["bk_branches"] = [list(b) for b in self.bk_branches]
+        d["kernels"] = [list(k) for k in self.kernels]
         d["timings"] = [list(t) for t in self.timings]
         d["devices"] = list(self.devices)
         return json.dumps(d, indent=2, sort_keys=True)
@@ -354,10 +415,11 @@ class ClipPlan:
     def from_json(cls, text: str) -> "ClipPlan":
         """Parse and validate a plan artifact; raises ``ValueError`` when stale.
 
-        v4 is current; v3 (pre-policy) and v2 (pre-consensus) migrate with
-        empty fingerprint/provenance — their measurements are still sound on
-        the device that took them, though a v3 ``agreed_hash`` no longer
-        re-verifies (the hash covered the v3 schema; re-run the agreement).
+        v5 is current; v4 (pre-kernel-map), v3 (pre-policy) and v2
+        (pre-consensus) migrate with empty defaults for the fields they
+        predate — their measurements are still sound on the device that
+        took them, though a v3/v4 ``agreed_hash`` no longer re-verifies
+        (the hash covered the older schema; re-run the agreement).
         v1 (pre-three-way) and unknown versions are rejected: their branch
         maps know nothing about the bk bank decision.
         """
@@ -370,11 +432,22 @@ class ClipPlan:
         for _, b in branches + bk_branches:
             if b not in BRANCHES:
                 raise ValueError(f"invalid branch {b!r} in ClipPlan")
+        kernels = tuple(
+            (str(n), str(op), str(impl)) for n, op, impl in d.get("kernels", ())
+        )
+        for _, op, impl in kernels:
+            if op not in KERNEL_OPS:
+                raise ValueError(f"unknown kernel op {op!r} in ClipPlan")
+            if impl not in KERNEL_IMPLS:
+                raise ValueError(
+                    f"invalid kernel impl {impl!r} for op {op!r} in ClipPlan"
+                )
         return cls(
             fingerprint=str(d["fingerprint"]),
             device=str(d["device"]),
             branches=branches,
             bk_branches=bk_branches,
+            kernels=kernels,
             physical_batch=d.get("physical_batch"),
             logical_batch=d.get("logical_batch"),
             accumulation_steps=d.get("accumulation_steps"),

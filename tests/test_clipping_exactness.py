@@ -299,6 +299,77 @@ def test_frozen_prefixes_bk_and_ghost_agree_on_covered_leaves():
             assert max_tree_diff(g_ref[key], g[key]) < 5e-5, (mode, key)
 
 
+def test_kernel_choice_flips_cost_not_math():
+    """The psg-contraction (and every other dispatch op) in the oracle
+    matrix with the kernel choice flipped both ways: Pallas and XLA impls
+    must produce the same losses, per-sample norms, and clipped gradients —
+    a kernel choice moves timings only."""
+    from repro.kernels import dispatch
+
+    m = _MLPModel()
+    batch = lm_batch(jax.random.PRNGKey(1), 4, 6, 17)
+
+    def run(mode, impl):
+        # build + trace inside the context: dispatch resolves at trace time
+        with dispatch.force_impl(impl):
+            fn = dp_value_and_clipped_grad(
+                m.loss_with_ctx, ClipConfig(mode=mode, clip_norm=0.3)
+            )
+            return fn(m.params, batch)
+
+    for mode in ["mixed_ghost", "bk_mixed", "bk_mixed_taps"]:
+        l_x, g_x, aux_x = run(mode, "xla")
+        l_p, g_p, aux_p = run(mode, "pallas")
+        assert jnp.allclose(l_x, l_p, rtol=1e-6), mode
+        assert jnp.allclose(
+            aux_x["per_sample_norms"], aux_p["per_sample_norms"], atol=2e-5
+        ), mode
+        assert max_tree_diff(g_x, g_p) < 2e-5, mode
+
+
+def test_embedding_vocab_guard_raises_on_fused_engines():
+    """Ids cross the fused bank side channel as fp32: a vocab >= 2^24 would
+    silently corrupt high token ids, so tracing must raise — on the norm
+    path and the book-keeping weighted-grad path alike.  The explicit taps
+    engine keeps integer ids and stays usable."""
+    import dataclasses as _dc
+
+    import repro.core.ghost as ghost_mod
+    from repro.core.taps import TapMeta
+
+    big_vocab = ghost_mod.MAX_EXACT_FP32_ID  # == 2^24: first size the (
+    # deliberately conservative) guard rejects
+    b, t, p = 2, 4, 3
+    meta = TapMeta(
+        kind="embedding", T=t, D=big_vocab, p=p, s_shape=(b, t, p),
+        s_dtype=jnp.float32, param_path="emb/e", batch_size=b, fused=True,
+        a_shape=(b, t), a_dtype=jnp.float32,
+    )
+    ids_f32 = jnp.zeros((b, t), jnp.float32)
+    ids_int = jnp.zeros((b, t), jnp.int32)
+    g = jnp.ones((b, t, p), jnp.float32)
+
+    # norm path, fp32 ids (fused engine): trace-time error
+    with pytest.raises(ValueError, match="2\\^24"):
+        ghost_mod.tap_norm_sq(meta, ids_f32, g)
+    # bank path (bk_mixed): same guard before anything is banked
+    with pytest.raises(ValueError, match="2\\^24"):
+        ghost_mod.tap_bank(meta, ids_f32, g, mode="bk_mixed")
+    # weighted-grad path from a banked book: guarded before the round-trip
+    with pytest.raises(ValueError, match="banked-id round-trip"):
+        ghost_mod.bank_weighted_grads(
+            meta, {"a": ids_f32, "g": g, "n": jnp.ones((b,))},
+            jnp.ones((b,)), (big_vocab, p),
+        )
+    # integer ids (explicit taps engine) are exact at any vocab: no raise
+    out = ghost_mod.tap_norm_sq(meta, ids_int, g)
+    assert out.shape == (b,)
+    # one id below the limit: fp32 is exact and the fused engine works
+    ok_meta = _dc.replace(meta, D=big_vocab - 1)
+    out = ghost_mod.tap_norm_sq(ok_meta, ids_f32, g)
+    assert out.shape == (b,)
+
+
 def test_fused_bk_never_pays_the_explicit_engine_memory():
     """The fused bk engine must beat the zero-taps + acts-dict formulation
     on XLA's compiled peak-memory model (no tap-sized zeros, no acts dict)."""

@@ -1,19 +1,38 @@
-"""Per-kernel validation: Pallas (interpret mode) and chunked-XLA ops vs the
-pure-jnp oracles, swept over shapes and dtypes."""
+"""Per-kernel validation: Pallas (interpret mode off-TPU, compiled on TPU)
+and chunked-XLA ops vs the pure-jnp oracles, swept over shapes and dtypes;
+plus the dispatch layer that routes between them."""
 import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.kernels import dispatch
 from repro.kernels.ghost_norm import ops as gops
-from repro.kernels.ghost_norm.ghost_norm import ghost_norm_sq_pallas
+from repro.kernels.ghost_norm.ghost_norm import (
+    embedding_ghost_norm_sq_pallas,
+    ghost_norm_sq_pallas,
+)
 from repro.kernels.ghost_norm.ref import (
     embedding_ghost_norm_sq_ref,
     ghost_norm_sq_ref,
     instantiated_norm_sq_ref,
 )
+from repro.kernels.psg_contract import ops as cops
+from repro.kernels.psg_contract.psg_contract import (
+    book_weighted_grad_pallas,
+    psg_contract_pallas,
+)
+from repro.kernels.psg_contract.ref import (
+    book_weighted_grad_ref,
+    psg_contract_ref,
+)
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import mha_reference
+
+on_tpu = jax.default_backend() == "tpu"
+requires_tpu = pytest.mark.skipif(
+    not on_tpu, reason="compiled (non-interpret) Pallas parity needs a TPU"
+)
 
 
 GHOST_SHAPES = [
@@ -71,6 +90,206 @@ def test_embedding_ghost_norm(t, block):
     got = gops.embedding_ghost_norm_sq(ids, g, block=block)
     want = embedding_ghost_norm_sq_ref(ids, g)
     assert jnp.allclose(got, want, rtol=1e-4)
+
+
+@pytest.mark.parametrize("t", [37, 41])
+def test_embedding_ghost_norm_pallas_vs_ref(t):
+    """Odd T forces the padded path — the two-sentinel machinery included."""
+    ids = jax.random.randint(jax.random.PRNGKey(2), (3, t), 0, 7)
+    g = jax.random.normal(jax.random.PRNGKey(3), (3, t, 5))
+    got = embedding_ghost_norm_sq_pallas(
+        ids, g, block_t=16, block_f=8, interpret=not on_tpu
+    )
+    want = embedding_ghost_norm_sq_ref(ids, g)
+    assert jnp.allclose(got, want, rtol=1e-4), float(jnp.max(jnp.abs(got - want)))
+
+
+def test_embedding_pad_sentinels_never_match():
+    """Regression for the single-sentinel padding bug: both id operands were
+    padded with the same -1, so pad-vs-pad positions DID match and exactness
+    silently rode on the cotangent being zero-padded.  With two distinct
+    sentinels, no padded position of either operand may equal ANY position
+    of the other — correctness no longer assumes anything about g's padding.
+    This test fails if pad_ids_pair ever regresses to one shared sentinel.
+    """
+    t, block = 37, 16
+    ids = jax.random.randint(jax.random.PRNGKey(0), (2, t), 0, 50)
+    ids_i, ids_j = gops.pad_ids_pair(ids, block)
+    assert ids_i.shape == ids_j.shape == (2, 48)
+    assert not bool(jnp.any(ids_i[:, t:, None] == ids_j[:, None, :]))
+    assert not bool(jnp.any(ids_j[:, t:, None] == ids_i[:, None, :]))
+    # real positions are untouched on both operands
+    assert bool(jnp.all(ids_i[:, :t] == ids)) and bool(jnp.all(ids_j[:, :t] == ids))
+    # no-padding case: the inputs come back unchanged
+    even_i, even_j = gops.pad_ids_pair(ids_i[:, :32], block)
+    assert even_i.shape == even_j.shape == (2, 32)
+    # end to end: the padded scan path agrees with the oracle
+    g = jax.random.normal(jax.random.PRNGKey(1), (2, t, 5))
+    got = gops.embedding_ghost_norm_sq(ids, g, block=block)
+    assert jnp.allclose(got, embedding_ghost_norm_sq_ref(ids, g), rtol=1e-4)
+
+
+# ------------------------------------------------------- psg contraction --
+BOOK_SHAPES = [
+    (1, 64, 16, 24, jnp.float32),
+    (2, 100, 33, 7, jnp.float32),
+    (3, 37, 8, 130, jnp.float32),
+    (1, 256, 64, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("m,r,d,p,dt", BOOK_SHAPES)
+def test_book_weighted_grad_pallas_vs_ref(m, r, d, p, dt):
+    ks = jax.random.split(jax.random.PRNGKey(r * 3 + d), 3)
+    a = jax.random.normal(ks[0], (m, r, d)).astype(dt)
+    g = jax.random.normal(ks[1], (m, r, p)).astype(dt)
+    w = jax.random.uniform(ks[2], (m, r))
+    got = book_weighted_grad_pallas(
+        a, g, w, block_r=32, block_d=16, block_p=16, interpret=not on_tpu
+    )
+    want = book_weighted_grad_ref(a, g, w)
+    tol = 5e-2 if dt == jnp.bfloat16 else 2e-4
+    assert jnp.allclose(got, want, rtol=tol, atol=tol), float(
+        jnp.max(jnp.abs(got - want))
+    )
+
+
+@pytest.mark.parametrize("m,r,d,p,dt", BOOK_SHAPES[:3])
+def test_book_weighted_grad_xla_vs_ref(m, r, d, p, dt):
+    ks = jax.random.split(jax.random.PRNGKey(m * 13 + p), 3)
+    a = jax.random.normal(ks[0], (m, r, d)).astype(dt)
+    g = jax.random.normal(ks[1], (m, r, p)).astype(dt)
+    w = jax.random.uniform(ks[2], (m, r))
+    assert jnp.allclose(
+        cops.book_weighted_grad(a, g, w), book_weighted_grad_ref(a, g, w),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("n,f", [(5, 33), (64, 7), (3, 1024)])
+def test_psg_contract_pallas_and_xla_vs_ref(n, f):
+    ks = jax.random.split(jax.random.PRNGKey(n + f), 2)
+    psg = jax.random.normal(ks[0], (n, f))
+    c = jax.random.uniform(ks[1], (n,))
+    want = psg_contract_ref(psg, c)
+    got = psg_contract_pallas(psg, c, block_n=16, block_f=16, interpret=not on_tpu)
+    assert jnp.allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert jnp.allclose(cops.psg_contract(psg, c), want, rtol=1e-5, atol=1e-5)
+
+
+def test_dispatch_psg_contract_axis():
+    """The bank layout carries the batch after the stack dims (axis=1)."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    psg = jax.random.normal(ks[0], (3, 5, 4, 2))  # (lead, B, *param)
+    c = jax.random.uniform(ks[1], (5,))
+    want = jnp.einsum("lb...,b->l...", psg, c)
+    for impl in ("xla", "pallas"):
+        got = dispatch.psg_contract(psg, c, axis=1, impl=impl)
+        assert got.shape == (3, 4, 2)
+        assert jnp.allclose(got, want, rtol=1e-5, atol=1e-5), impl
+
+
+# ------------------------------------------------------------- dispatch --
+def test_dispatch_constants_mirror_plan_validation():
+    """plan.py duplicates the op/impl vocab to stay import-free of the
+    kernels package; the two must never drift."""
+    from repro.tuner.plan import KERNEL_IMPLS, KERNEL_OPS
+
+    assert KERNEL_OPS == dispatch.OPS
+    assert KERNEL_IMPLS == dispatch.IMPLS
+
+
+def test_dispatch_defaults_follow_backend():
+    expected = "pallas" if on_tpu else "xla"
+    for op in dispatch.OPS:
+        assert dispatch.default_impl(op) == expected
+        assert dispatch.resolve(op) == expected
+        # an explicit argument always wins
+        assert dispatch.resolve(op, "xla") == "xla"
+    if on_tpu:
+        assert dispatch.available_impls() == ("pallas", "xla")
+    else:
+        assert dispatch.available_impls() == ("xla",)
+
+
+def test_dispatch_force_impl_and_validation():
+    with dispatch.force_impl("pallas"):
+        assert dispatch.resolve("ghost_norm") == "pallas"
+        assert dispatch.resolve("psg_contract") == "pallas"
+        # nested per-op override wins over the blanket one
+        with dispatch.force_impl(psg_contract="xla"):
+            assert dispatch.resolve("psg_contract") == "xla"
+            assert dispatch.resolve("ghost_norm") == "pallas"
+        assert dispatch.resolve("psg_contract") == "pallas"
+    # context restored
+    assert dispatch.resolve("ghost_norm") == dispatch.default_impl("ghost_norm")
+    with pytest.raises(ValueError):
+        dispatch.resolve("ghost_norm", "cuda")
+    with pytest.raises(ValueError):
+        dispatch.resolve("not_an_op", "xla")
+    with pytest.raises(ValueError):
+        dispatch.default_impl("not_an_op")
+    with pytest.raises(ValueError):
+        with dispatch.force_impl("banana"):
+            pass
+    with pytest.raises(ValueError):
+        with dispatch.force_impl(not_an_op="xla"):
+            pass
+
+
+def test_dispatch_ops_agree_across_impls():
+    """Both impls of every dispatch op compute the same values."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    a = jax.random.normal(ks[0], (2, 40, 12))
+    g = jax.random.normal(ks[1], (2, 40, 6))
+    c = jax.random.uniform(ks[2], (2,))
+    ids = jax.random.randint(ks[3], (2, 40), 0, 9)
+    pairs = [
+        lambda impl: dispatch.ghost_norm_sq(a, g, block=16, impl=impl),
+        lambda impl: dispatch.embedding_ghost_norm_sq(ids, g, block=16, impl=impl),
+        lambda impl: dispatch.book_weighted_grad(
+            a, g, jnp.broadcast_to(c[:, None], (2, 40)), impl=impl
+        ),
+        lambda impl: dispatch.psg_contract(a, c, impl=impl),
+    ]
+    for fn in pairs:
+        x, y = fn("xla"), fn("pallas")
+        assert jnp.allclose(x, y, rtol=2e-4, atol=2e-4), float(
+            jnp.max(jnp.abs(x - y))
+        )
+
+
+# ------------------------------------- compiled TPU parity (non-interpret) --
+@requires_tpu
+def test_tpu_ghost_norm_compiled_parity():
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    a = jax.random.normal(ks[0], (4, 300, 96))
+    g = jax.random.normal(ks[1], (4, 300, 48))
+    got = ghost_norm_sq_pallas(a, g, interpret=False)
+    assert jnp.allclose(got, ghost_norm_sq_ref(a, g), rtol=2e-4)
+
+
+@requires_tpu
+def test_tpu_embedding_ghost_norm_compiled_parity():
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    ids = jax.random.randint(ks[0], (4, 300), 0, 1000)
+    g = jax.random.normal(ks[1], (4, 300, 64))
+    got = embedding_ghost_norm_sq_pallas(ids.astype(jnp.float32), g, interpret=False)
+    assert jnp.allclose(got, embedding_ghost_norm_sq_ref(ids, g), rtol=2e-4)
+
+
+@requires_tpu
+def test_tpu_psg_contract_compiled_parity():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    a = jax.random.normal(ks[0], (2, 700, 130))
+    g = jax.random.normal(ks[1], (2, 700, 70))
+    w = jax.random.uniform(ks[2], (2, 700))
+    got = book_weighted_grad_pallas(a, g, w, interpret=False)
+    assert jnp.allclose(got, book_weighted_grad_ref(a, g, w), rtol=2e-4, atol=2e-4)
+    psg = jax.random.normal(ks[0], (48, 1300))
+    c = jax.random.uniform(ks[1], (48,))
+    got = psg_contract_pallas(psg, c, interpret=False)
+    assert jnp.allclose(got, psg_contract_ref(psg, c), rtol=2e-4, atol=2e-4)
 
 
 ATTN_CASES = [

@@ -315,6 +315,116 @@ def test_plan_changes_branch_not_math(mode):
     assert max_tree_diff(g1, g2) < 1e-5
 
 
+@pytest.mark.parametrize("mode", ["mixed_ghost", "bk_mixed", "bk_mixed_taps"])
+def test_plan_kernel_choice_changes_no_output(mode):
+    """Flipping the plan-recorded kernel impl (v5 ``kernels``) re-routes the
+    hot ops through the other implementation without changing any output —
+    the acceptance oracle for the dispatch layer."""
+    model, params, batch = _two_layer_setup()
+    metas = discover_meta(model.loss_with_ctx, params, batch)
+    from repro.tuner.measure import KERNEL_OPS_BY_KIND
+
+    def plan_with(impl):
+        return ClipPlan(
+            fingerprint=shape_fingerprint(metas),
+            device=device_string(),
+            kernels=tuple(
+                (n, op, impl)
+                for n, m in sorted(metas.items())
+                for op in KERNEL_OPS_BY_KIND.get(m.kind, ())
+            ),
+        )
+
+    outs = {}
+    for impl in ("xla", "pallas"):
+        fn = dp_value_and_clipped_grad(
+            model.loss_with_ctx, ClipConfig(mode=mode, plan=plan_with(impl))
+        )
+        outs[impl] = fn(params, batch)
+    l_x, g_x, aux_x = outs["xla"]
+    l_p, g_p, aux_p = outs["pallas"]
+    assert jnp.allclose(l_x, l_p, rtol=1e-6)
+    assert jnp.allclose(
+        aux_x["per_sample_norms"], aux_p["per_sample_norms"], atol=1e-5
+    )
+    assert max_tree_diff(g_x, g_p) < 1e-5
+
+
+def test_plan_v5_kernels_round_trip_and_staleness(tmp_path):
+    metas = _tiny_metas()
+    plan = ClipPlan(
+        fingerprint=shape_fingerprint(metas),
+        device=device_string(),
+        kernels=(("a/out", "ghost_norm", "xla"),
+                 ("a/out", "psg_contract", "xla"),
+                 ("emb/out", "embedding_ghost_norm", "xla")),
+    )
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    loaded = ClipPlan.load(path)
+    assert loaded == plan
+    assert loaded.kernel_map() == {
+        "a/out": {"ghost_norm": "xla", "psg_contract": "xla"},
+        "emb/out": {"embedding_ghost_norm": "xla"},
+    }
+    assert loaded.kernels_for(metas) == loaded.kernel_map()
+    # stale fingerprint or wrong device -> {} (dispatch backend default)
+    stale = dataclasses.replace(loaded, fingerprint="deadbeefdeadbeef")
+    assert stale.kernels_for(metas) == {}
+    wrong_dev = dataclasses.replace(loaded, device="tpu:TPU v9")
+    assert wrong_dev.kernels_for(metas) == {}
+    # RATIFYING a fleet agreement is enough for branch overrides but NOT
+    # for the kernel map: impls are backend-specific, and a pallas winner
+    # measured on the fleet's TPU kind must not trace the interpreter on
+    # the ratifying kinds
+    ratified = dataclasses.replace(
+        loaded, device="tpu:TPU v9", devices=(device_string(),),
+        branches=(("a/out", "ghost"),),
+        kernels=(("a/out", "ghost_norm", "pallas"),),
+    )
+    assert ratified.overrides_for(metas) == {"a/out": "ghost"}
+    assert ratified.kernels_for(metas) == {}
+    # the kernel map is covered by the consensus hash: a fleet cannot mix
+    flipped = dataclasses.replace(
+        loaded, kernels=(("a/out", "ghost_norm", "pallas"),) + loaded.kernels[1:]
+    )
+    assert flipped.consensus_hash() != loaded.consensus_hash()
+    # invalid impls and unknown ops are rejected at parse time — a typo'd
+    # op would otherwise load cleanly and silently never take effect
+    bad = json.loads(plan.to_json())
+    bad["kernels"] = [["a/out", "ghost_norm", "banana"]]
+    with pytest.raises(ValueError):
+        ClipPlan.from_json(json.dumps(bad))
+    bad["kernels"] = [["a/out", "ghost_nrm", "pallas"]]
+    with pytest.raises(ValueError, match="unknown kernel op"):
+        ClipPlan.from_json(json.dumps(bad))
+    # v4 artifacts (no kernels key) migrate with an empty map
+    v4 = json.loads(plan.to_json())
+    del v4["kernels"]
+    v4["version"] = 4
+    assert ClipPlan.from_json(json.dumps(v4)).kernels == ()
+
+
+def test_build_plan_records_kernel_choices():
+    model, params, batch = _two_layer_setup()
+    metas = discover_meta(model.loss_with_ctx, params, batch)
+    from repro.kernels import dispatch
+    from repro.tuner.measure import KERNEL_OPS_BY_KIND
+
+    plan = build_plan(
+        metas, measure=MeasureConfig(repeats=1, warmup=1), arch="twolayer"
+    )
+    kmap = plan.kernel_map()
+    expected_taps = {
+        n for n, m in metas.items() if m.kind in KERNEL_OPS_BY_KIND
+    }
+    assert set(kmap) == expected_taps
+    for n, ks in kmap.items():
+        assert set(ks) == set(KERNEL_OPS_BY_KIND[metas[n].kind])
+        for impl in ks.values():
+            assert impl in dispatch.available_impls()
+
+
 def test_measured_plan_round_trips_through_engine(tmp_path):
     """build_plan -> save -> ClipConfig(plan=...) produces analytic-equal grads."""
     model, params, batch = _two_layer_setup()
