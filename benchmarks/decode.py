@@ -1,0 +1,90 @@
+"""Serving latency benchmark: the continuous-batching engine under load.
+
+Sweeps offered load (queued requests per decode slot) and reports, per
+load point: throughput (tok/s), p50/p95 TTFT and p50/p95 per-token
+latency — the row schema every other benchmark uses, so the history
+archive and the dashboard track serving regressions exactly like training
+ones.  A sequential one-request-at-a-time baseline anchors the batching
+win on the same prompts.
+
+Row naming: ``decode/<arch>/seq`` and ``decode/<arch>/load<r>``;
+``us_per_call`` is the p50 per-token decode latency (µs), ``derived``
+carries the full metric set.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import build_model, get_arch
+from repro.serving import Engine, aggregate_metrics, sequential_decode
+
+
+def _prompts(n: int, vocab: int, lo: int, hi: int, seed: int = 7):
+    out = []
+    for i in range(n):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed + i))
+        plen = int(jax.random.randint(k1, (), lo, hi + 1))
+        out.append((1 + jax.random.randint(
+            k2, (plen,), 0, vocab - 1, dtype=jnp.int32)).tolist())
+    return out
+
+
+def run(fast: bool = True, arch: str = "codeqwen1.5-7b"):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    slots = 4
+    max_new = 8 if fast else 16
+    lo, hi = (4, 10) if fast else (8, 24)
+    max_len = hi + max_new
+    loads = (1.0, 2.0) if fast else (0.5, 1.0, 2.0, 4.0)
+
+    rows = []
+
+    # sequential baseline: same prompts as the load=1.0 point
+    base_prompts = _prompts(slots, cfg.vocab, lo, hi)
+    view_len = Engine(model, params, n_slots=slots, page_size=8,
+                      max_len=max_len).view_len
+    sequential_decode(model, params, base_prompts[:1], max_new=2,
+                      view_len=view_len)  # compile warmup
+    t0 = time.perf_counter()
+    seq_out = sequential_decode(model, params, base_prompts,
+                                max_new=max_new, view_len=view_len)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(t) for t in seq_out)
+    rows.append((
+        f"decode/{arch}/seq",
+        dt / max(n_tok, 1) * 1e6,
+        f"tok/s={n_tok / dt:.1f} requests={slots}",
+    ))
+
+    for load in loads:
+        n_req = max(1, round(load * slots))
+        engine = Engine(model, params, n_slots=slots, page_size=8,
+                        max_len=max_len)
+        # warmup: compile prefill (per prompt length) + the decode step
+        # outside the timed region
+        prompts = _prompts(n_req, cfg.vocab, lo, hi, seed=31)
+        for p in {len(q): q for q in prompts}.values():
+            engine.submit(p, max_new=2)
+        engine.drain()
+        engine = Engine(model, params, n_slots=slots, page_size=8,
+                        max_len=max_len)
+        for p in prompts:
+            engine.submit(p, max_new=max_new)
+        completions = engine.drain()
+        m = aggregate_metrics(completions)
+        rows.append((
+            f"decode/{arch}/load{load:g}",
+            m["per_token_p50_ms"] * 1e3,
+            f"tok/s={m['tok_per_s']:.1f} requests={n_req} "
+            f"ttft_p50_ms={m['ttft_p50_ms']:.1f} "
+            f"ttft_p95_ms={m['ttft_p95_ms']:.1f} "
+            f"per_token_p95_ms={m['per_token_p95_ms']:.1f} "
+            f"shed={int(m['shed'])}",
+        ))
+    return rows

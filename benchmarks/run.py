@@ -26,6 +26,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        decode,
         fig3_memory_curve,
         kernels,
         modes,
@@ -42,6 +43,7 @@ def main() -> None:
         "table1": lambda: table1_complexity.run(),
         "table3": lambda: table3_decision.run(),
         "kernels": lambda: kernels.run(fast=args.fast),
+        "decode": lambda: decode.run(fast=args.fast),
         "table4": lambda: table4_time_memory.run(batch=32 if args.fast else 64),
         "table5": lambda: table5_accuracy.run(steps=10 if args.fast else 30),
         "table7": lambda: table7_max_batch.run(),

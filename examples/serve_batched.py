@@ -1,16 +1,19 @@
-"""Batched serving with per-request completion tracking (continuous-batching
-style slot recycling on a fixed decode batch).
+"""Continuous-batching serving demo on ``repro.serving.Engine``.
+
+Submits a mixed-length request stream (some with TTFT SLOs), drains the
+engine, and prints per-request latency plus the aggregate benchmark row.
+A finished slot is recycled to the next queued request on the very next
+decode step — watch the ``steps`` count stay far below requests x max_new.
 
     PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x7b
 """
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import build_model, get_arch
-from repro.launch.steps import make_decode_step
+from repro.serving import Engine, aggregate_metrics
 
 
 def main():
@@ -18,45 +21,45 @@ def main():
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-prompt", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=10)
+    ap.add_argument("--slo-ttft-ms", type=float, default=None)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    decode = jax.jit(make_decode_step(model))
-    prefill = jax.jit(model.prefill)
 
-    pending = list(range(args.requests))
-    done = {}
-    t0 = time.time()
-    total_tokens = 0
-    wave = 0
-    while pending:
-        batch_ids = pending[: args.slots]
-        pending = pending[args.slots :]
-        toks = jax.random.randint(
-            jax.random.PRNGKey(100 + wave), (len(batch_ids), args.prompt_len),
-            0, cfg.vocab, dtype=jnp.int32,
-        )
-        state = model.init_state(len(batch_ids), args.prompt_len + args.max_new)
-        logits, state = prefill(params, {"tokens": toks}, state)
-        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-        outs = [tok]
-        for _ in range(args.max_new - 1):
-            tok, _, state = decode(params, tok, state)
-            outs.append(tok)
-        gen = jnp.concatenate(outs, axis=1)
-        total_tokens += int(gen.size)
-        for i, rid in enumerate(batch_ids):
-            done[rid] = gen[i].tolist()
-        wave += 1
-    dt = time.time() - t0
-    print(f"served {args.requests} requests in {wave} waves, "
-          f"{total_tokens} tokens, {total_tokens/dt:.1f} tok/s")
-    for rid in sorted(done)[:3]:
-        print(f"  request {rid}: {done[rid]}")
+    engine = Engine(
+        model, params,
+        n_slots=args.slots,
+        page_size=8,
+        max_len=args.max_prompt + args.max_new,
+        eos_id=0,
+    )
+
+    key = jax.random.PRNGKey(100)
+    for i in range(args.requests):
+        key, k1, k2 = jax.random.split(key, 3)
+        plen = int(jax.random.randint(k1, (), 4, args.max_prompt + 1))
+        prompt = (1 + jax.random.randint(
+            k2, (plen,), 0, cfg.vocab - 1, dtype=jnp.int32)).tolist()
+        engine.submit(prompt, max_new=args.max_new,
+                      slo_ttft_ms=args.slo_ttft_ms)
+
+    completions = engine.drain()
+    for rid in sorted(completions):
+        c = completions[rid]
+        ttft = f"{c.ttft_s * 1e3:6.1f}ms" if c.ttft_s is not None else "   shed"
+        print(f"request {rid}: prompt={c.prompt_len:3d} finish={c.finish:6s} "
+              f"ttft={ttft} tokens={c.tokens}")
+
+    m = aggregate_metrics(completions)
+    print(f"\n{int(m['requests'])} served / {int(m['shed'])} shed in "
+          f"{engine.steps} engine steps: {int(m['tokens'])} tokens, "
+          f"{m['tok_per_s']:.1f} tok/s, "
+          f"TTFT p95 {m['ttft_p95_ms']:.1f}ms, "
+          f"per-token p95 {m['per_token_p95_ms']:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -3,9 +3,10 @@
 # exercises the complexity model (table1), the Eq-4.1 decision (table3), the
 # kernel-dispatch hot ops per impl (kernels -> BENCH_kernels.json), the
 # mode trajectory non_private / mixed_ghost / fused bk_mixed (modes ->
-# BENCH_modes.json), and the clipping-policy trajectory (policies ->
-# BENCH_policies.json), then a quantile-policy training smoke (R adapts
-# toward the target, epsilon includes the release cost).
+# BENCH_modes.json), the clipping-policy trajectory (policies ->
+# BENCH_policies.json), and the continuous-batching serving engine under
+# load (decode -> BENCH_decode.json), then a quantile-policy training
+# smoke (R adapts toward the target, epsilon includes the release cost).
 #
 # Bench artifacts are copied into benchmarks/history/ stamped with the git
 # SHA, so the perf trajectory accumulates in-repo — commit them with the PR.
@@ -18,14 +19,14 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python -m pytest -x -q
-python -m benchmarks.run --fast --only table1,table3,kernels,modes,policies --out-dir "${BENCH_OUT:-.}"
+python -m benchmarks.run --fast --only table1,table3,kernels,modes,policies,decode --out-dir "${BENCH_OUT:-.}"
 python scripts/check_docs_links.py
 python scripts/policy_smoke.py
 
 # accumulate the perf trajectory in-repo (SHA-stamped; commit with the PR)
 sha="$(git rev-parse --short HEAD 2>/dev/null || echo nogit)"
 mkdir -p benchmarks/history
-for f in BENCH_modes.json BENCH_policies.json BENCH_kernels.json; do
+for f in BENCH_modes.json BENCH_policies.json BENCH_kernels.json BENCH_decode.json; do
   if [ -f "${BENCH_OUT:-.}/$f" ]; then
     cp "${BENCH_OUT:-.}/$f" "benchmarks/history/${sha}-$f"
     echo "# archived benchmarks/history/${sha}-$f" >&2

@@ -13,6 +13,8 @@ module is the single place that decision is made:
                      embedding_ghost_norm_sq_pallas   gops.embedding_ghost_norm_sq
     psg_contract     book_weighted_grad_pallas /      cops.book_weighted_grad /
                      psg_contract_pallas              cops.psg_contract
+    flash_attention  flash_attention_pallas           fops.flash_attention
+                     (static masks only; dynamic cache args fall back)
 
 Resolution order, per call:
 
@@ -40,10 +42,11 @@ from typing import Iterator, Mapping, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.flash_attention import ops as fops
 from repro.kernels.ghost_norm import ops as gops
 from repro.kernels.psg_contract import ops as cops
 
-OPS = ("ghost_norm", "embedding_ghost_norm", "psg_contract")
+OPS = ("ghost_norm", "embedding_ghost_norm", "psg_contract", "flash_attention")
 IMPLS = ("pallas", "xla")
 
 # force_impl() state: {op: impl}; consulted at trace time, tests only
@@ -201,4 +204,62 @@ def psg_contract(
         )
     return jnp.tensordot(
         c.astype(jnp.float32), psg.astype(jnp.float32), axes=(0, axis)
+    )
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, K, hd)
+    v: jax.Array,  # (B, Skv, K, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,
+    kv_valid_len: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    block_q: int = 512,
+    block_kv: int = 512,
+    scale: Optional[float] = None,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Serving attention (B, Sq, H, hd layout), forward only.
+
+    The Pallas kernel covers the static-mask cases (causal/window with an
+    int ``q_offset``).  Dynamic cache shapes — a traced ``q_offset``, ring
+    ``kv_positions``, or a ``kv_valid_len`` fill level — fall back to the
+    XLA path regardless of the resolved impl: the kernel has no scalar-
+    prefetch story for them yet (the paged-attention follow-on).  Training
+    never routes through here (it needs the custom VJP in
+    ``flash_attention.ops``); this wrapper is for cache-serving traces.
+    """
+    pallas_ok = (
+        kv_positions is None
+        and kv_valid_len is None
+        and scale is None
+        and isinstance(q_offset, int)
+    )
+    if resolve("flash_attention", impl) == "pallas" and pallas_ok:
+        from repro.kernels.flash_attention.flash_attention import (
+            flash_attention_pallas,
+        )
+
+        h, kh = q.shape[2], k.shape[2]
+        qt = jnp.moveaxis(q, 1, 2)  # (B, H, Sq, hd)
+        kt = jnp.moveaxis(k, 1, 2)
+        vt = jnp.moveaxis(v, 1, 2)
+        if kh != h:
+            # GQA: query head h reads kv head h // g (matches the XLA
+            # (B, S, K, g, hd) grouping)
+            kt = jnp.repeat(kt, h // kh, axis=1)
+            vt = jnp.repeat(vt, h // kh, axis=1)
+        out = flash_attention_pallas(
+            qt, kt, vt, causal=causal, window=window, q_offset=q_offset,
+            block_q=min(block_q, 128), block_kv=min(block_kv, 128),
+            interpret=_interpret(),
+        )
+        return jnp.moveaxis(out, 1, 2)
+    return fops.flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        kv_valid_len=kv_valid_len, kv_positions=kv_positions,
+        block_q=block_q, block_kv=block_kv, scale=scale,
     )

@@ -1,8 +1,13 @@
-"""Batched serving driver: prefill + decode with per-request completion.
+"""Serving driver: continuous-batching engine + per-request metrics.
+
+Token-prompt decoder LMs route through ``repro.serving.Engine`` — request
+queue, SLO-aware admission, paged KV pool, per-step slot recycling.  The
+encoder-frontend families (audio, vlm) still decode as one fixed wave, but
+with honest token accounting: generation and counting stop at EOS.
 
 CPU quickstart:
     python -m repro.launch.serve --arch mixtral-8x7b --reduced \
-        --batch 4 --prompt-len 16 --max-new 12
+        --slots 4 --requests 8 --prompt-len 16 --max-new 12
 """
 from __future__ import annotations
 
@@ -15,19 +20,102 @@ import jax.numpy as jnp
 
 from repro.configs.registry import build_model, get_arch
 from repro.launch.steps import make_decode_step
+from repro.serving import Engine, aggregate_metrics
 from repro.utils.logging import get_logger
 
 log = get_logger("serve")
+
+
+def _serve_engine(model, cfg, params, args) -> int:
+    engine = Engine(
+        model, params,
+        n_slots=args.slots,
+        page_size=args.page,
+        max_len=args.prompt_len + args.max_new,
+        eos_id=args.eos,
+    )
+    key = jax.random.PRNGKey(1)
+    for _ in range(args.requests):
+        key, sub = jax.random.split(key)
+        # 1 + ... keeps random prompts off the EOS id
+        prompt = (1 + jax.random.randint(
+            sub, (args.prompt_len,), 0, cfg.vocab - 1, dtype=jnp.int32
+        )).tolist()
+        rid, admitted = engine.submit(
+            prompt, max_new=args.max_new, slo_ttft_ms=args.slo_ttft_ms)
+        if not admitted:
+            log.info("request %d shed at admission (projected TTFT > SLO)", rid)
+    completions = engine.drain()
+    m = aggregate_metrics(completions)
+    log.info(
+        "%d requests (%d shed): %d tokens, %.1f tok/s | TTFT p50 %.1fms "
+        "p95 %.1fms | per-token p50 %.1fms p95 %.1fms",
+        int(m["requests"]), int(m["shed"]), int(m["tokens"]), m["tok_per_s"],
+        m["ttft_p50_ms"], m["ttft_p95_ms"],
+        m["per_token_p50_ms"], m["per_token_p95_ms"],
+    )
+    for rid in sorted(completions)[:2]:
+        c = completions[rid]
+        log.info("request %d [%s]: %s", rid, c.finish, c.tokens)
+    return 0
+
+
+def _serve_wave(model, cfg, params, args) -> int:
+    """Legacy fixed-wave decode for the encoder-frontend families."""
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(
+        key, (args.slots, args.prompt_len), 0, cfg.vocab, dtype=jnp.int32)}
+    if cfg.family == "vlm":
+        batch["prefix"] = jax.random.normal(
+            jax.random.PRNGKey(2), (args.slots, cfg.prefix_tokens, cfg.prefix_dim)
+        ).astype(jnp.dtype(cfg.dtype))
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(3), (args.slots, cfg.encoder_seq, cfg.d_model)
+        ).astype(jnp.dtype(cfg.dtype))
+
+    max_len = args.prompt_len + args.max_new + (cfg.prefix_tokens or 0)
+    state = model.init_state(args.slots, max_len)
+
+    t0 = time.time()
+    logits, state = jax.jit(model.prefill)(params, batch, state)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    decode = jax.jit(make_decode_step(model))
+    done = tok[:, 0] == args.eos
+    outputs = [tok]
+    t0 = time.time()
+    for _ in range(args.max_new - 1):
+        if bool(jnp.all(done)):
+            break
+        tok, _, state = decode(params, tok, state)
+        # finished lanes keep stepping (fixed wave) but emit nothing:
+        # -1 marks dead rows so they never reach the output or the count
+        outputs.append(jnp.where(done[:, None], -1, tok))
+        done = done | (tok[:, 0] == args.eos)
+    t_decode = time.time() - t0
+    gen = jnp.concatenate(outputs, axis=1)
+    n_tok = int(jnp.sum(gen != -1))
+    log.info("prefill %.3fs; decode %d tokens in %.3fs (%.1f tok/s)",
+             t_prefill, n_tok, t_decode, n_tok / max(t_decode, 1e-9))
+    for i in range(min(args.slots, 2)):
+        row = [t for t in gen[i].tolist() if t != -1]
+        log.info("request %d: %s", i, row)
+    return 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--page", type=int, default=16)
     ap.add_argument("--eos", type=int, default=0)
+    ap.add_argument("--slo-ttft-ms", type=float, default=None)
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -36,44 +124,9 @@ def main(argv=None) -> int:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    key = jax.random.PRNGKey(1)
-    batch = {"tokens": jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab, dtype=jnp.int32)}
-    if cfg.family == "vlm":
-        batch["prefix"] = jax.random.normal(
-            jax.random.PRNGKey(2), (args.batch, cfg.prefix_tokens, cfg.prefix_dim)
-        ).astype(jnp.dtype(cfg.dtype))
-    if cfg.family == "audio":
-        batch["frames"] = jax.random.normal(
-            jax.random.PRNGKey(3), (args.batch, cfg.encoder_seq, cfg.d_model)
-        ).astype(jnp.dtype(cfg.dtype))
-
-    max_len = args.prompt_len + args.max_new + (cfg.prefix_tokens or 0)
-    state = model.init_state(args.batch, max_len)
-
-    t0 = time.time()
-    logits, state = jax.jit(model.prefill)(params, batch, state)
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    t_prefill = time.time() - t0
-
-    decode = jax.jit(make_decode_step(model))
-    done = jnp.zeros((args.batch,), bool)
-    outputs = [tok]
-    t0 = time.time()
-    for _ in range(args.max_new - 1):
-        tok, _, state = decode(params, tok, state)
-        done = done | (tok[:, 0] == args.eos)
-        outputs.append(tok)
-        if bool(jnp.all(done)):
-            break
-    t_decode = time.time() - t0
-    gen = jnp.concatenate(outputs, axis=1)
-    n_tok = int(gen.shape[0] * gen.shape[1])
-    log.info("prefill %.3fs; decode %d tokens in %.3fs (%.1f tok/s)",
-             t_prefill, n_tok, t_decode, n_tok / max(t_decode, 1e-9))
-    for i in range(min(args.batch, 2)):
-        log.info("request %d: %s", i, gen[i].tolist())
-    return 0
+    if cfg.family == "audio" or cfg.prefix_tokens:
+        return _serve_wave(model, cfg, params, args)
+    return _serve_engine(model, cfg, params, args)
 
 
 if __name__ == "__main__":

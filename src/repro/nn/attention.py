@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.taps import Ctx
+from repro.kernels import dispatch
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.nn.module import Dense, Module, Params, AxesTree
 from repro.nn.rotary import apply_rope
@@ -193,7 +194,10 @@ class Attention(Module):
                 k = self.wk(params["k"], kv_src, ctx.scope("k")).reshape(b, skv, self.n_kv, self.head_dim)
                 v = self.wv(params["v"], kv_src, ctx.scope("v")).reshape(b, skv, self.n_kv, self.head_dim)
                 new_cache = {"k": k, "v": v} if cache is not None else None
-            out = flash_attention(
+            # serving (cache present) traces through kernel dispatch; the
+            # training path needs the custom-VJP XLA op directly
+            fa = dispatch.flash_attention if cache is not None else flash_attention
+            out = fa(
                 q, k, v, causal=False, block_q=self.block_q, block_kv=self.block_kv,
             )
             y = self.wo(params["o"], out.reshape(b, s, -1), ctx.scope("o"))
@@ -240,7 +244,7 @@ class Attention(Module):
                 cv = jnp.roll(vc[:, s - length :], shift, axis=1)
                 pos = jnp.roll(jnp.arange(s - length, s, dtype=jnp.int32), shift)
                 new_cache = {"k": ck, "v": cv, "pos": pos, "idx": idx + s}
-                out = flash_attention(
+                out = dispatch.flash_attention(
                     q, kc, vc, causal=self.causal, window=self.window,
                     block_q=self.block_q, block_kv=self.block_kv,
                 )
@@ -253,7 +257,9 @@ class Attention(Module):
                     causal=self.causal, window=self.window,
                 )
             else:
-                out = flash_attention(
+                # traced q_offset + ring kv_positions: dispatch falls back
+                # to the XLA path today, but the choice point is here
+                out = dispatch.flash_attention(
                     q, ck, cv, causal=self.causal, window=self.window,
                     q_offset=idx, kv_positions=pos,
                     block_q=self.block_q, block_kv=self.block_kv,

@@ -1,0 +1,31 @@
+"""repro.serving — continuous-batching decode service.
+
+Layer map:
+
+- ``engine``     — ``Engine``: submit/step/drain orchestrator, jitted
+  batched decode (vmap over B=1 lanes) + per-slot prefill install.
+- ``scheduler``  — ``SlotScheduler``: lane occupancy, per-slot page tables,
+  next-step slot recycling.
+- ``queue``      — ``RequestQueue`` + ``LatencyModel``: SLO-aware admission
+  (shed when projected TTFT blows the deadline).
+- ``kv_pages``   — paged KV pool: fixed-size pages, shared page table,
+  gather/scatter ops traced into the engine's step functions.
+- ``reference``  — ``sequential_decode``: the bit-exactness oracle.
+"""
+from repro.serving.engine import Engine, aggregate_metrics
+from repro.serving.kv_pages import PageAllocator
+from repro.serving.queue import Completion, LatencyModel, Request, RequestQueue
+from repro.serving.reference import sequential_decode
+from repro.serving.scheduler import SlotScheduler
+
+__all__ = [
+    "Engine",
+    "aggregate_metrics",
+    "PageAllocator",
+    "Completion",
+    "LatencyModel",
+    "Request",
+    "RequestQueue",
+    "sequential_decode",
+    "SlotScheduler",
+]

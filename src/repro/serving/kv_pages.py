@@ -1,0 +1,239 @@
+"""Paged KV cache: fixed-size pages + per-slot page tables.
+
+The model's serving state (``model.init_state(1, view_len)``) stores each
+attention layer's KV cache as a contiguous ``(stack, 1, L, K, hd)`` buffer.
+Allocating that buffer per decode slot means every slot pays for ``max_len``
+even when its request is 20 tokens long.  This module splits the sequence
+axis of every KV leaf into fixed-size **pages** held in one shared pool:
+
+    pool leaf   (stack, n_pages, page, K, hd)      one slab per kv leaf
+    page table  (n_slots, max_pages) int32         shared by every layer/leaf
+
+Slot ``s``'s logical row ``j`` lives at ``pool[:, table[s, j // page],
+j % page]`` — long and short requests draw from the same pool, and a slot's
+pages return to the free list the step its request finishes.
+
+Page id 0 is the reserved **null page**: unused page-table entries point at
+it, so scatters from idle slots land in a sacrificial slab and gathers from
+it produce junk that the position mask (``pos == -1``) already excludes.
+
+Everything device-side here is pure and jit-friendly (the engine traces
+``gather_views`` / ``scatter_prefill`` / ``scatter_rows`` into its step
+functions); the free-list bookkeeping (``PageAllocator``) is host-side
+Python between steps.  On CPU/GPU the gather materializes the per-slot
+views (correctness-first — the memory win is in the *persistent* pool);
+a Pallas paged-attention kernel that consumes the page table directly in
+VMEM is the TPU follow-on, same HBM argument as the psg contraction.
+
+Cache-tree layout notes: a KV-cache node is any dict with exactly the
+``make_kv_cache`` keys ``{k, v, pos, idx}``; its ``k``/``v`` leaves are
+paged, while ``pos``/``idx`` (tiny) stay in the dense per-slot state.  Any
+other cache entry (Mamba conv/ssm states, xLSTM registers) has no sequence
+axis and stays dense too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+KV_KEYS = frozenset({"k", "v", "pos", "idx"})
+
+NULL_PAGE = 0
+
+
+def is_kv_node(node: Any) -> bool:
+    """True for an attention KV-cache dict (the ``make_kv_cache`` layout)."""
+    return isinstance(node, dict) and set(node.keys()) == KV_KEYS
+
+
+def kv_paths(tree: Any, _path: tuple = ()) -> list[tuple]:
+    """Paths (key tuples) of every KV-cache node inside a nested-dict tree."""
+    if is_kv_node(tree):
+        return [_path]
+    if isinstance(tree, dict):
+        out = []
+        for key in sorted(tree):
+            out.extend(kv_paths(tree[key], _path + (key,)))
+        return out
+    return []
+
+
+def get_at(tree: Any, path: tuple) -> Any:
+    for key in path:
+        tree = tree[key]
+    return tree
+
+
+def set_at(tree: Any, path: tuple, value: Any) -> Any:
+    """Functional deep-set for nested dicts (returns a new tree)."""
+    if not path:
+        return value
+    out = dict(tree)
+    out[path[0]] = set_at(tree[path[0]], path[1:], value)
+    return out
+
+
+def strip_kv(state: Any) -> Any:
+    """The dense remainder: KV nodes keep only their ``pos``/``idx`` leaves."""
+    if is_kv_node(state):
+        return {"pos": state["pos"], "idx": state["idx"]}
+    if isinstance(state, dict):
+        return {k: strip_kv(v) for k, v in state.items()}
+    return state
+
+
+def extract_kv(state: Any) -> dict[tuple, dict]:
+    """{path: {"k": leaf, "v": leaf}} for every KV node in ``state``."""
+    return {
+        p: {"k": get_at(state, p)["k"], "v": get_at(state, p)["v"]}
+        for p in kv_paths(state)
+    }
+
+
+def merge_kv(dense: Any, views: dict[tuple, dict]) -> Any:
+    """Reassemble a full model state from the dense remainder + KV views."""
+    out = dense
+    for path, kv in views.items():
+        node = dict(get_at(out, path))
+        node["k"] = kv["k"]
+        node["v"] = kv["v"]
+        out = set_at(out, path, node)
+    return out
+
+
+# -- device-side paging ops (pure; traced into the engine step fns) --------
+def make_pools(template_state: Any, n_pages: int, page: int) -> dict[tuple, dict]:
+    """Zeroed page pools for every KV leaf of a per-slot template state.
+
+    ``template_state`` is ``model.init_state(1, view_len)``; every KV leaf
+    must be ``(stack, 1, view_len, K, hd)`` with one shared ``view_len``
+    (asserted — ring-sized caches shorter than the view are rejected by the
+    engine before we get here).
+    """
+    pools: dict[tuple, dict] = {}
+    for path in kv_paths(template_state):
+        node = get_at(template_state, path)
+        pools[path] = {}
+        for name in ("k", "v"):
+            leaf = node[name]
+            assert leaf.ndim == 5 and leaf.shape[1] == 1, (
+                f"KV leaf at {path} has shape {leaf.shape}; expected "
+                "(stack, 1, L, K, hd)"
+            )
+            assert leaf.shape[2] % page == 0, (
+                f"view length {leaf.shape[2]} not a multiple of page {page}"
+            )
+            stack, _, _, kh, hd = leaf.shape
+            pools[path][name] = jnp.zeros(
+                (stack, n_pages, page, kh, hd), leaf.dtype
+            )
+    return pools
+
+
+def gather_views(pools: dict[tuple, dict], table: jax.Array) -> dict[tuple, dict]:
+    """Materialize per-slot contiguous KV views from the pools.
+
+    ``table``: (n_slots, max_pages) int32.  Returns {path: {"k"/"v":
+    (n_slots, stack, 1, max_pages*page, K, hd)}} — the stacked per-lane
+    layout the vmapped decode step consumes.
+    """
+    n_slots, max_pages = table.shape
+
+    def one(pool: jax.Array) -> jax.Array:
+        stack, _, page, kh, hd = pool.shape
+        g = jnp.take(pool, table, axis=1)  # (stack, n_slots, max_pages, page, K, hd)
+        g = jnp.moveaxis(g, 1, 0)
+        return g.reshape(n_slots, stack, 1, max_pages * page, kh, hd)
+
+    return {
+        path: {"k": one(kv["k"]), "v": one(kv["v"])}
+        for path, kv in pools.items()
+    }
+
+
+def scatter_prefill(
+    pools: dict[tuple, dict], kv_state: dict[tuple, dict], table_row: jax.Array
+) -> dict[tuple, dict]:
+    """Write one freshly prefilled slot's full KV view into its pages.
+
+    ``kv_state``: {path: {"k"/"v": (stack, 1, L, K, hd)}} from the per-slot
+    prefill; ``table_row``: (max_pages,) page ids (unused entries point at
+    the null page — their writes are junk rows landing in the sacrificial
+    slab).
+    """
+    out: dict[tuple, dict] = {}
+    for path, kv in pools.items():
+        out[path] = {}
+        for name in ("k", "v"):
+            pool = kv[name]
+            stack, _, page, kh, hd = pool.shape
+            leaf = kv_state[path][name]
+            max_pages = leaf.shape[2] // page
+            r = leaf.reshape(stack, max_pages, page, kh, hd)
+            out[path][name] = pool.at[:, table_row].set(r)
+    return out
+
+
+def scatter_rows(
+    pools: dict[tuple, dict],
+    rows: dict[tuple, dict],
+    page_ids: jax.Array,
+    offsets: jax.Array,
+) -> dict[tuple, dict]:
+    """Write one decode step's newly produced KV row per slot.
+
+    ``rows``: {path: {"k"/"v": (n_slots, stack, K, hd)}}; ``page_ids`` /
+    ``offsets``: (n_slots,) target page and in-page row per slot.  Slots
+    whose page-table row is null all write page 0 — sacrificial, masked on
+    read.
+    """
+    out: dict[tuple, dict] = {}
+    for path, kv in pools.items():
+        out[path] = {}
+        for name in ("k", "v"):
+            pool = kv[name]
+            r = jnp.moveaxis(rows[path][name], 0, 1)  # (stack, n_slots, K, hd)
+            out[path][name] = pool.at[:, page_ids, offsets].set(r)
+    return out
+
+
+# -- host-side allocation ---------------------------------------------------
+@dataclasses.dataclass
+class PageAllocator:
+    """Free-list page allocator (host side; page 0 is never handed out).
+
+    Reservation-based: a request's worst case ``ceil((prompt + max_new) /
+    page)`` pages are claimed at admission, so an admitted request can never
+    hit mid-flight pool exhaustion (the SLO contract — admission is the only
+    shedding point).  Pages free as one batch when the request finishes.
+    """
+
+    n_pages: int
+    page: int
+
+    def __post_init__(self) -> None:
+        self._free = list(range(self.n_pages - 1, 0, -1))  # pop() -> low ids
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, total_tokens: int) -> int:
+        return max(1, math.ceil(total_tokens / self.page))
+
+    def reserve(self, total_tokens: int) -> Optional[list[int]]:
+        """Claim pages for ``total_tokens`` cache rows, or None if the pool
+        cannot cover them right now (caller leaves the request queued)."""
+        need = self.pages_needed(total_tokens)
+        if need > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(need)]
+
+    def release(self, pages: list[int]) -> None:
+        for p in pages:
+            assert p != NULL_PAGE
+            self._free.append(p)

@@ -1,0 +1,43 @@
+"""Sequential one-request-at-a-time greedy decode — the exactness oracle.
+
+This is the semantics the continuous-batching engine must reproduce
+bit-identically: each prompt gets a fresh dense cache of the same view
+length, an exact-length prefill, then single-token greedy decode until EOS
+or the budget runs out.  Tests and the decode benchmark compare
+``Engine.drain()`` token streams against this.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.steps import make_decode_step
+
+
+def sequential_decode(
+    model: Any,
+    params: Any,
+    prompts: list[list[int]],
+    *,
+    max_new: int = 16,
+    view_len: int = 128,
+    eos_id: Optional[int] = None,
+) -> list[list[int]]:
+    """Greedy-decode each prompt independently; returns generated ids
+    (EOS included when hit, like the engine's completions)."""
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(make_decode_step(model))
+    out: list[list[int]] = []
+    for prompt in prompts:
+        state = model.init_state(1, view_len)
+        toks = jnp.asarray(prompt, jnp.int32)[None]
+        logits, state = prefill(params, {"tokens": toks}, state)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        gen = [int(tok[0, 0])]
+        while len(gen) < max_new and (eos_id is None or gen[-1] != eos_id):
+            tok, _, state = decode(params, tok, state)
+            gen.append(int(tok[0, 0]))
+        out.append(gen)
+    return out

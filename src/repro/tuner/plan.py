@@ -87,7 +87,9 @@ BRANCHES = ("ghost", "instantiate")
 # kernel ops / impl values a v5 plan may record per tap; mirror
 # repro.kernels.dispatch.OPS / .IMPLS (duplicated so plan validation stays
 # free of kernel imports — tests/test_kernels.py asserts they agree)
-KERNEL_OPS = ("ghost_norm", "embedding_ghost_norm", "psg_contract")
+KERNEL_OPS = (
+    "ghost_norm", "embedding_ghost_norm", "psg_contract", "flash_attention"
+)
 KERNEL_IMPLS = ("pallas", "xla")
 TUNED_MODES = ("mixed_ghost", "bk_mixed")
 # ClipPlan fields that record consensus *provenance* rather than measurement:

@@ -259,6 +259,42 @@ def test_dispatch_ops_agree_across_impls():
         )
 
 
+@pytest.mark.parametrize("window,n_kv", [(None, 8), (9, 8), (None, 2)])
+def test_dispatch_flash_attention_impls_agree(window, n_kv):
+    """Serving attention through dispatch: pallas == xla on the static-mask
+    cases, including sliding windows and GQA head grouping."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    b, s, h, hd = 2, 37, 8, 16
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, n_kv, hd))
+    v = jax.random.normal(ks[2], (b, s, n_kv, hd))
+    x = dispatch.flash_attention(q, k, v, causal=True, window=window,
+                                 impl="xla")
+    p = dispatch.flash_attention(q, k, v, causal=True, window=window,
+                                 impl="pallas")
+    assert jnp.allclose(x, p, rtol=2e-5, atol=2e-5), float(
+        jnp.max(jnp.abs(x - p))
+    )
+
+
+def test_dispatch_flash_attention_dynamic_args_fall_back():
+    """Ring positions / fill levels / traced offsets have no pallas path;
+    a forced pallas choice must still produce the XLA result."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    b, s, h, hd = 1, 16, 4, 8
+    q = jax.random.normal(ks[0], (b, 1, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    pos = jnp.where(jnp.arange(s) < 10, jnp.arange(s), -1)
+    want = dispatch.flash_attention(
+        q, k, v, causal=True, q_offset=jnp.asarray(9), kv_positions=pos,
+        impl="xla")
+    with dispatch.force_impl(flash_attention="pallas"):
+        got = dispatch.flash_attention(
+            q, k, v, causal=True, q_offset=jnp.asarray(9), kv_positions=pos)
+    assert jnp.array_equal(want, got)
+
+
 # ------------------------------------- compiled TPU parity (non-interpret) --
 @requires_tpu
 def test_tpu_ghost_norm_compiled_parity():
