@@ -25,6 +25,14 @@ def main() -> None:
                     help="directory for the BENCH_<name>.json artifacts")
     args = ap.parse_args()
 
+    # pin the launch env (allocator, XLA step markers, preallocate-off)
+    # before the benchmark imports below pull in jax — timings archived to
+    # benchmarks/history/ are only comparable under the same harness
+    from repro.launch.env import apply_env, host_fingerprint
+
+    apply_env()
+    host = host_fingerprint()
+
     from benchmarks import (
         decode,
         fig3_memory_curve,
@@ -65,8 +73,11 @@ def main() -> None:
         try:
             for row_name, us, derived in fn():
                 print(f"{row_name},{us:.1f},{derived}")
+                # "host" tags the row's host class so the step-time gate
+                # only ever compares same-host rows (render ignores it)
                 rows.append(
-                    {"name": row_name, "us_per_call": us, "derived": str(derived)}
+                    {"name": row_name, "us_per_call": us,
+                     "derived": str(derived), "host": host}
                 )
         except Exception:  # noqa: BLE001
             failures += 1

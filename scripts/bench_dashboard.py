@@ -13,19 +13,33 @@ buried in CI artifact retention.
 
     python scripts/bench_dashboard.py [--history-dir benchmarks/history]
                                       [--out DASHBOARD.md] [--check]
+                                      [--check-step-time PCT]
 
 ``--check`` exits non-zero when the written dashboard differs from what the
 current artifacts render to — the CI guard against archiving new artifacts
-without regenerating.  Stdlib only; runs from scripts/tier1.sh.
+without regenerating.
+
+``--check-step-time PCT`` is the step-time floor gate: for every metric it
+compares the newest archived row against the most recent OLDER row from the
+same host class (rows carry a ``host`` fingerprint stamped by
+``benchmarks/run.py``; rows from different hosts, or legacy rows without
+the stamp, never pair) and exits non-zero when any step time regressed by
+more than PCT percent.  Intentional trade-offs ship by setting
+``BENCH_STEP_TIME_WAIVER`` to a short justification — the gate then prints
+the regressions and the waiver and passes.  Stdlib only; runs from
+scripts/tier1.sh.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import re
 import subprocess
 import sys
 from pathlib import Path
+
+WAIVER_ENV = "BENCH_STEP_TIME_WAIVER"
 
 REPO = Path(__file__).resolve().parent.parent
 # "nogit" is tier1.sh's stamp when git rev-parse fails — still rendered
@@ -125,6 +139,77 @@ def render(history: dict[str, dict[str, list[dict]]],
     return "\n".join(lines)
 
 
+def step_time_regressions(
+    history: dict[str, dict[str, list[dict]]],
+    full_order: dict[str, int],
+    pct: float,
+) -> list[str]:
+    """Same-host step-time regressions beyond ``pct`` percent, newest row
+    vs its closest same-host predecessor.  One message per offense.
+
+    Only rows with a positive ``us_per_call`` AND a ``host`` stamp
+    participate: ratio rows (us=0) carry no step time, and legacy
+    stampless artifacts predate the harness, so comparing against them
+    would gate on cross-host noise.
+    """
+    offenses: list[str] = []
+    for bench in sorted(history):
+        per_sha = history[bench]
+        shas = _order_shas(list(per_sha), full_order)
+        if len(shas) < 2:
+            continue
+        newest = shas[-1]
+        for row in per_sha[newest]:
+            name, host = str(row.get("name", "")), row.get("host")
+            us = float(row.get("us_per_call", 0.0))
+            if not name or not host or us <= 0.0:
+                continue
+            for prev in reversed(shas[:-1]):
+                base = next(
+                    (r for r in per_sha[prev]
+                     if str(r.get("name", "")) == name
+                     and r.get("host") == host
+                     and float(r.get("us_per_call", 0.0)) > 0.0),
+                    None,
+                )
+                if base is None:
+                    continue
+                base_us = float(base["us_per_call"])
+                if us > base_us * (1.0 + pct / 100.0):
+                    offenses.append(
+                        f"BENCH_{bench}/{name}: {us / 1000.0:.1f}ms at "
+                        f"{newest} vs {base_us / 1000.0:.1f}ms at {prev} "
+                        f"(+{(us / base_us - 1.0) * 100.0:.1f}% > "
+                        f"{pct:.0f}% budget, host {host})"
+                    )
+                break  # compare against the closest same-host row only
+    return offenses
+
+
+def check_step_time(
+    history: dict[str, dict[str, list[dict]]],
+    full_order: dict[str, int],
+    pct: float,
+    *,
+    waiver: str | None = None,
+) -> int:
+    """Gate exit code: 0 clean (or waived), 1 on unwaived regressions."""
+    offenses = step_time_regressions(history, full_order, pct)
+    if not offenses:
+        print(f"step-time gate: no same-host regressions beyond {pct:.0f}%")
+        return 0
+    for line in offenses:
+        print(f"STEP-TIME REGRESSION: {line}", file=sys.stderr)
+    if waiver:
+        print(f"step-time gate: {len(offenses)} regression(s) WAIVED "
+              f"({WAIVER_ENV}={waiver!r})", file=sys.stderr)
+        return 0
+    print(f"ERROR: {len(offenses)} step-time regression(s); optimize, or "
+          f"ship the trade-off explicitly with {WAIVER_ENV}=<reason>",
+          file=sys.stderr)
+    return 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--history-dir", default=str(REPO / "benchmarks" / "history"))
@@ -133,11 +218,24 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="exit 1 if the existing dashboard is out of date "
                          "instead of writing")
+    ap.add_argument("--check-step-time", type=float, default=None,
+                    metavar="PCT",
+                    help="exit 1 when the newest same-host row regressed "
+                         "any step time by more than PCT percent "
+                         f"(waive with {WAIVER_ENV}=<reason>)")
     args = ap.parse_args(argv)
 
     history_dir = Path(args.history_dir)
     out_path = Path(args.out) if args.out else history_dir / "DASHBOARD.md"
-    text = render(load_history(history_dir), git_sha_order(REPO)) + "\n"
+    history = load_history(history_dir)
+    order = git_sha_order(REPO)
+    text = render(history, order) + "\n"
+
+    if args.check_step_time is not None:
+        return check_step_time(
+            history, order, args.check_step_time,
+            waiver=os.environ.get(WAIVER_ENV),
+        )
 
     if args.check:
         current = out_path.read_text() if out_path.exists() else ""

@@ -1,0 +1,48 @@
+# Launch environment harness (shell half of src/repro/launch/env.py).
+#
+# Source this before any python that imports jax:
+#
+#   source scripts/launch_env.sh
+#
+# It pins the parts of the environment that move step timings between
+# otherwise-identical runs: the allocator (tcmalloc preloaded when the
+# host has it), XLA's step markers (so profilers bracket whole steps),
+# allocator preallocation (OFF, so the tuner's OOM-trial ladder can
+# actually reclaim a failed trial), and log noise.  Every assignment is a
+# default — values already exported by the caller are left alone.  Keep
+# the variable list in sync with repro.launch.env, which applies the same
+# defaults from inside Python for entry points not launched through here.
+
+# tcmalloc: steadier large-allocation behavior than glibc malloc for
+# host-staged batches; preload only when present (absent in slim images)
+if [ -z "${LD_PRELOAD:-}" ]; then
+  for _tcm in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+              /usr/lib/libtcmalloc.so.4 \
+              /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4; do
+    if [ -f "$_tcm" ]; then
+      export LD_PRELOAD="$_tcm"
+      break
+    fi
+  done
+  unset _tcm
+fi
+
+# only report pathological single allocations, not every weight buffer
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}"
+
+# silence libtf/XLA info chatter that skews wall-clock on slow ttys
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+# let the OOM-trial retry ladder reclaim failed trials' arenas
+export XLA_PYTHON_CLIENT_PREALLOCATE="${XLA_PYTHON_CLIENT_PREALLOCATE:-false}"
+
+# step markers at the outer while loop (1); 0 would mark program entry.
+# TPU only: the CPU/GPU wheels abort on unknown DebugOptions in XLA_FLAGS
+case "${JAX_PLATFORMS:-cpu}" in
+  tpu*)
+    case " ${XLA_FLAGS:-} " in
+      *"--xla_step_marker_location"*) : ;;
+      *) export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_step_marker_location=1" ;;
+    esac
+    ;;
+esac

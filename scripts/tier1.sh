@@ -18,6 +18,9 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# pin allocator + XLA flags so archived step times are comparable run-to-run
+source scripts/launch_env.sh
+
 python -m pytest -x -q
 python -m benchmarks.run --fast --only table1,table3,kernels,modes,policies,decode --out-dir "${BENCH_OUT:-.}"
 python scripts/check_docs_links.py
@@ -35,3 +38,8 @@ done
 
 # fold the history dir into the markdown trend dashboard (commit with the PR)
 python scripts/bench_dashboard.py
+
+# step-time floor gate: fail when this run's archived rows regressed any
+# same-host step time beyond the budget (waive intentional trade-offs with
+# BENCH_STEP_TIME_WAIVER=<reason>)
+python scripts/bench_dashboard.py --check-step-time "${BENCH_STEP_TIME_PCT:-20}"

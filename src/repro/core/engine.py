@@ -125,7 +125,7 @@ class PrivacyEngine:
             return plan
         from repro.tuner import max_batch as _mb
 
-        mp = _mb.max_batch_by_memory(
+        mp, method = _mb.certify_max_batch(
             self.clipped_grad_fn(), params, batch,
             budget_bytes=plan.budget_bytes, hi_cap=hi_cap,
             reserved_bytes=_mb.resident_state_bytes(params),
@@ -134,8 +134,8 @@ class PrivacyEngine:
             return None
         if mp != plan.physical_batch:
             _, steps = _mb.derive_accumulation(self.batch_size, mp)
-            log.info("re-certified max physical batch under %s: %d (was %s)",
-                     self.mode, mp, plan.physical_batch)
+            log.info("re-certified max physical batch under %s by %s: %d "
+                     "(was %s)", self.mode, method, mp, plan.physical_batch)
             plan = plan.replace_batch(
                 physical_batch=mp, logical_batch=self.batch_size,
                 accumulation_steps=steps, budget_bytes=plan.budget_bytes,
@@ -285,11 +285,12 @@ class PrivacyEngine:
             grad_fn = dp_value_and_clipped_grad(
                 self.loss_with_ctx, dataclasses.replace(self._clip_cfg, plan=plan)
             )
-            mp = _mb.max_batch_by_memory(
+            mp, method = _mb.certify_max_batch(
                 grad_fn, params, batch, budget_bytes=budget, hi_cap=hi_cap,
                 reserved_bytes=_mb.resident_state_bytes(params),
             )
             if mp > 0:
+                log.info("max physical batch certified by %s: %d", method, mp)
                 _, steps = _mb.derive_accumulation(self.batch_size, mp)
                 plan = plan.replace_batch(
                     physical_batch=mp,
@@ -307,11 +308,11 @@ class PrivacyEngine:
                             self.loss_with_ctx,
                             dataclasses.replace(self._clip_cfg, plan=p),
                         )
-                        return _mb.max_batch_by_memory(
+                        return _mb.certify_max_batch(
                             grad_fn, params, batch, budget_bytes=budget,
                             hi_cap=hi_cap,
                             reserved_bytes=_mb.resident_state_bytes(params),
-                        )
+                        )[0]
 
                     plan = close_physical_batch_loop(
                         plan, meta, _search, self.batch_size, budget,

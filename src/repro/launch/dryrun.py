@@ -1,5 +1,8 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.env import apply_env
+
+# full harness (allocator, markers, preallocate-off) + the 512-device
+# host platform this dry run lowers against — BEFORE jax initializes
+apply_env(host_devices=512)
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 

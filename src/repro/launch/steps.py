@@ -156,6 +156,94 @@ def make_clipped_microstep(model, dp: DPTrainConfig) -> Callable:
     return dp_value_and_clipped_grad(model.loss_with_ctx, clip_cfg)
 
 
+def make_accum_init(grad_spec: Any, n_samples: int) -> Callable:
+    """Zero accumulator for one logical batch: () -> acc pytree.
+
+    ``grads`` mirrors the clipped-grad pytree (``grad_spec`` from an
+    ``eval_shape`` of the microstep); ``norms``/``mask`` are flat
+    ``(n_samples,)`` buffers the microsteps scatter into, so the policy
+    update sees the whole logical batch without a host-side concatenate.
+    The accumulator is DONATED through every jitted microstep — one
+    resident buffer set per logical batch, not a double-buffered copy per
+    microstep.
+    """
+
+    def init() -> dict:
+        return {
+            "grads": jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), grad_spec
+            ),
+            "loss": jnp.zeros((), jnp.float32),
+            "clip_hits": jnp.zeros((), jnp.float32),
+            "norms": jnp.zeros((n_samples,), jnp.float32),
+            "mask": jnp.zeros((n_samples,), jnp.float32),
+        }
+
+    return init
+
+
+def make_accum_microstep(model, dp: DPTrainConfig) -> Callable:
+    """Accumulating microstep: (params, policy_state, acc, batch, idx) -> acc.
+
+    One jitted program per microbatch that clips AND folds into the
+    logical-batch accumulator — grad sum, loss sum, clip-hit count, and the
+    per-sample norms/Poisson mask scattered at microstep ``idx``'s offset.
+    Keeping the fold inside the program (instead of a host-side
+    ``tree_map(add)``) lets XLA schedule the per-tap bank reductions and
+    the accumulator update together, and donating ``acc`` aliases the
+    output into the input buffers: no double-buffered accumulator, no host
+    sync per microstep.  ``idx`` is a traced scalar so every microstep runs
+    the same compiled program.
+    """
+    grad_fn = make_clipped_microstep(model, dp)
+
+    def micro(params, policy_state, acc: dict, batch: Any, idx) -> dict:
+        loss, g, aux = grad_fn(params, batch, policy_state)
+        norms = aux["per_sample_norms"].astype(jnp.float32)
+        physical = norms.shape[0]
+        m = _batch_mask(batch)
+        mask = (
+            jnp.ones((physical,), jnp.float32) if m is None
+            else m.astype(jnp.float32)
+        )
+        off = (idx * physical,)
+        return {
+            "grads": jax.tree_util.tree_map(jnp.add, acc["grads"], g),
+            "loss": acc["loss"] + loss.astype(jnp.float32),
+            "clip_hits": acc["clip_hits"]
+            + jnp.sum((aux["clip_factors"] < 1.0).astype(jnp.float32)),
+            "norms": jax.lax.dynamic_update_slice(acc["norms"], norms, off),
+            "mask": jax.lax.dynamic_update_slice(acc["mask"], mask, off),
+        }
+
+    return micro
+
+
+def make_accum_finalize(
+    optimizer: Optimizer, schedule: Callable, dp: DPTrainConfig
+) -> Callable:
+    """Logical-batch finalize over the donated accumulator:
+    (state, acc) -> (state, metrics).
+
+    Thin jit target around ``make_noise_finalize`` that also derives the
+    step metrics on device — the host loop touches no per-microstep values,
+    so a logging ``float()`` only ever syncs at a logical-batch boundary.
+    """
+    base = make_noise_finalize(optimizer, schedule, dp)
+    n_samples = dp.logical_batch
+
+    def finalize(state: dict, acc: dict) -> tuple[dict, dict]:
+        metrics = {
+            "loss": acc["loss"] / dp.accumulation_steps,
+            "lr": schedule(state["step"]),
+            "clip_frac": acc["clip_hits"] / n_samples,
+        }
+        new_state = base(state, acc["grads"], acc["norms"], acc["mask"])
+        return new_state, metrics
+
+    return finalize
+
+
 def make_noise_finalize(optimizer: Optimizer, schedule: Callable, dp: DPTrainConfig):
     """Noise + update once per logical batch.
 

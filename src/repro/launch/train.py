@@ -39,7 +39,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import build_model, get_arch
-from repro.core.clipping import _batch_mask
 from repro.core.engine import PrivacyEngine
 from repro.data.pipeline import DataPipeline
 from repro.data.poisson import poisson_sample_mask
@@ -48,8 +47,10 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import (
     DPTrainConfig,
+    make_accum_finalize,
+    make_accum_init,
+    make_accum_microstep,
     make_clipped_microstep,
-    make_noise_finalize,
     make_train_state,
     make_train_step,
 )
@@ -400,23 +401,54 @@ def run_once(args) -> int:
             # step.  AOT-compile INSIDE the reshard context (like the
             # accum==1 path): a lazy jit would trace at first call, outside
             # it, silently dropping every sharding constraint.
+            #
+            # The accumulator is a device-resident pytree DONATED through
+            # every microstep and into the finalize: the fold runs inside
+            # the jitted program (bank reductions overlap the accumulator
+            # update), the buffers alias in place instead of
+            # double-buffering per microstep, and the host loop performs no
+            # sync until the logical-batch boundary.
             st_spec = jax.eval_shape(lambda: state)
             b_spec = jax.eval_shape(lambda: batch_fn(0, 0))
             micro_raw = make_clipped_microstep(model, dp)
             p_spec = st_spec["policy"]
-            micro_fn = jax.jit(
-                micro_raw, in_shardings=(st_sh["params"], b_sh, st_sh["policy"]),
-            ).lower(st_spec["params"], b_spec, p_spec).compile()
             g_spec = jax.eval_shape(micro_raw, st_spec["params"], b_spec, p_spec)[1]
             # the policy update runs once per LOGICAL batch, over the
-            # concatenated per-sample norms (and Poisson mask) of every
-            # microstep — one quantile release per noise addition
-            n_spec = jax.ShapeDtypeStruct((physical * accum,), jnp.float32)
+            # per-sample norms (and Poisson mask) of every microstep,
+            # scattered into the accumulator's flat (physical*accum,)
+            # buffers — one quantile release per noise addition
+            acc_init = make_accum_init(g_spec, physical * accum)
+            acc_spec = jax.eval_shape(acc_init)
+            acc_sh = {
+                "grads": st_sh["params"], "loss": None, "clip_hits": None,
+                "norms": None, "mask": None,
+            }
+            idx_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            init_fn = jax.jit(
+                acc_init, out_shardings=acc_sh,
+            ).lower().compile()
+            micro_fn = jax.jit(
+                make_accum_microstep(model, dp),
+                in_shardings=(
+                    st_sh["params"], st_sh["policy"], acc_sh, b_sh, None,
+                ),
+                out_shardings=acc_sh,
+                donate_argnums=(2,),
+            ).lower(
+                st_spec["params"], p_spec, acc_spec, b_spec, idx_spec
+            ).compile()
+            # state is donated (params/opt alias into the update); the
+            # accumulator is NOT — its leaves are temps inside the finalize
+            # (noise-add, optimizer) with no matching output to alias, so
+            # donating them only triggers the unusable-donation warning
             fin_fn = jax.jit(
-                make_noise_finalize(optimizer, schedule, dp),
-                in_shardings=(st_sh, None, None, None), out_shardings=st_sh,
+                make_accum_finalize(optimizer, schedule, dp),
+                in_shardings=(st_sh, acc_sh), out_shardings=(st_sh, None),
                 donate_argnums=(0,),
-            ).lower(st_spec, g_spec, n_spec, n_spec).compile()
+            ).lower(st_spec, acc_spec).compile()
+            # microstep indices as device scalars, built once: the loop
+            # body transfers nothing and never blocks mid-logical-batch
+            idx_dev = [jnp.asarray(i, jnp.int32) for i in range(accum)]
 
     watchdog = StepWatchdog()
     preempt = PreemptionHandler().install()
@@ -435,34 +467,20 @@ def run_once(args) -> int:
                 step_idx = step
                 if args.fail_at_step is not None and step_idx == args.fail_at_step:
                     raise RuntimeError(f"injected fault at step {step_idx}")
-                # loss/clip stats stay device arrays until logging: a
-                # float() inside the loop would sync the host per microstep
-                grad_sum, loss_acc, clip_hits = None, 0.0, 0.0
-                norms_parts, mask_parts = [], []
-                for _ in range(accum):
+                # every microstep is async dispatch into the donated
+                # accumulator; nothing on the host reads a device value, so
+                # the bank reductions of microstep i overlap the dispatch
+                # (and compute) of microstep i+1
+                acc = init_fn()
+                for i in range(accum):
                     _, batch = pipeline.next()
-                    loss, g, aux = micro_fn(state["params"], batch, state["policy"])
-                    grad_sum = g if grad_sum is None else jax.tree_util.tree_map(
-                        jnp.add, grad_sum, g
+                    acc = micro_fn(
+                        state["params"], state["policy"], acc, batch, idx_dev[i]
                     )
-                    loss_acc = loss_acc + loss
-                    clip_hits = clip_hits + jnp.sum(aux["clip_factors"] < 1.0)
-                    norms_parts.append(aux["per_sample_norms"])
-                    m = _batch_mask(batch)
-                    mask_parts.append(
-                        jnp.ones((physical,), jnp.float32) if m is None
-                        else m.astype(jnp.float32)
-                    )
-                state = fin_fn(
-                    state, grad_sum,
-                    jnp.concatenate(norms_parts).astype(jnp.float32),
-                    jnp.concatenate(mask_parts),
-                )
-                metrics = {
-                    "loss": loss_acc / accum,
-                    "lr": schedule(step_idx),
-                    "clip_frac": clip_hits / (physical * accum),
-                }
+                state, metrics = fin_fn(state, acc)
+                # the ONE host sync per logical batch: bounds the dispatch
+                # queue and makes the watchdog time executed work
+                jax.block_until_ready(state["step"])
             engine.record_step()
             dt = watchdog.end_step(step_idx)
             step = step_idx + 1

@@ -18,9 +18,13 @@ from repro.tuner.consensus import (
     verify_adopted,
 )
 from repro.tuner.max_batch import (
+    certify_max_batch,
     derive_accumulation,
     find_max_physical_batch,
+    is_oom_error,
     max_batch_by_memory,
+    max_batch_by_trial,
+    trials_available,
 )
 from repro.tuner.measure import (
     MeasureConfig,
@@ -59,9 +63,13 @@ __all__ = [
     "measure_tap",
     "measure_tap_kernels",
     "remeasure_at_batch",
+    "certify_max_batch",
     "derive_accumulation",
     "find_max_physical_batch",
+    "is_oom_error",
     "max_batch_by_memory",
+    "max_batch_by_trial",
+    "trials_available",
     "default_plan_path",
     "device_string",
     "load_cached_plan",

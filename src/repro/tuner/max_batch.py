@@ -1,24 +1,65 @@
 """Max physical microbatch search (paper Table 7, reused as a runtime feature).
 
-The paper bisects the largest batch that trains without OOM on a 16GB V100;
-here the same doubling + binary search runs against XLA's compiled peak-memory
-model (args + outputs + temps from ``memory_analysis()``), which is exact,
-fast, and hardware-independent — no trial allocations, no poisoned allocator
-state after a real OOM.  The result feeds gradient accumulation: a fixed
-*logical* batch (the privacy unit) is executed as ``accumulation_steps``
-microbatches of the tuned physical size — the paper's virtual-step pattern.
+The paper bisects the largest batch that trains without OOM on a 16GB V100.
+Two search drivers implement that here:
+
+- **trial executions** (``max_batch_by_trial``, the default where real
+  arrays are available): each candidate batch actually RUNS the clipped
+  gradient step and blocks on the result, so the certificate covers
+  everything the compiled-memory model cannot see — allocator
+  fragmentation, runtime workspaces, the framework's own buffers.  A trial
+  that dies of OOM is caught, the allocator is given a chance to recover
+  (gc + XLA cache drop — the retry ladder; pair with
+  ``XLA_PYTHON_CLIENT_PREALLOCATE=false`` from ``scripts/launch_env.sh``
+  so the backend allocator can actually return memory), and the search
+  continues downward instead of killing the process;
+- **the compiled peak-memory model** (``max_batch_by_memory``: args +
+  outputs + temps from ``memory_analysis()``), which is fast and
+  hardware-independent — the fallback when only abstract shapes are
+  available or trials are disabled (``REPRO_MAX_BATCH_METHOD=memory``).
+
+``certify_max_batch`` picks between them.  On hosts whose budget is larger
+than the device (CPU runs with a paper-sized budget), the trial driver
+still applies the memory model as a pre-filter, so both drivers converge to
+the same batch — the trial adds the execution certificate on top.  The
+result feeds gradient accumulation: a fixed *logical* batch (the privacy
+unit) is executed as ``accumulation_steps`` microbatches of the tuned
+physical size — the paper's virtual-step pattern.
 """
 from __future__ import annotations
 
+import gc
+import os
 from typing import Any, Callable, Mapping, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.utils.logging import get_logger
 
 log = get_logger("tuner.max_batch")
 
 DEFAULT_BUDGET_BYTES = 16 * 1024**3  # the paper's 16GB V100
+
+# substrings that identify an allocator/compiler OOM across backends (XLA
+# runtime, PJRT GPU/TPU, host malloc) — anything else propagates: a shape
+# bug must not masquerade as "does not fit"
+_OOM_TOKENS = (
+    "RESOURCE_EXHAUSTED",
+    "Out of memory",
+    "out of memory",
+    "OOM",
+    "bad_alloc",
+    "Resource exhausted",
+)
+
+
+def is_oom_error(e: BaseException) -> bool:
+    """True when the exception is a memory-exhaustion failure."""
+    if isinstance(e, MemoryError):
+        return True
+    msg = str(e)
+    return any(tok in msg for tok in _OOM_TOKENS)
 
 
 def compiled_memory_bytes(fn: Callable, *specs) -> int:
@@ -121,6 +162,169 @@ def max_batch_by_memory(
         return mem <= budget_bytes
 
     return find_max_physical_batch(fits, hi_cap=hi_cap)
+
+
+def batch_at(batch: Any, b: int) -> Any:
+    """Real arrays for ``batch`` resized to leading dim ``b`` (tile + slice).
+
+    The trial driver needs concrete data, not specs: content is irrelevant
+    to memory behaviour, so the template rows are recycled.
+    """
+
+    def resize(x):
+        n = x.shape[0]
+        if b <= n:
+            return x[:b]
+        reps = -(-b // n)
+        return jnp.concatenate([x] * reps, axis=0)[:b]
+
+    return jax.tree_util.tree_map(resize, batch)
+
+
+def recover_allocator() -> None:
+    """Post-OOM recovery half of the retry ladder.
+
+    Drops every dead Python reference (the failed trial's arrays), then
+    XLA's live-executable cache — compiled programs pin their workspace
+    reservations, and the just-failed candidate's executable is garbage by
+    definition.  With ``XLA_PYTHON_CLIENT_PREALLOCATE=false`` (set by
+    ``scripts/launch_env.sh``) the backend allocator can then actually
+    return the freed blocks, so the next (smaller) trial starts clean
+    instead of inheriting a poisoned arena.
+    """
+    gc.collect()
+    try:
+        jax.clear_caches()
+    except Exception as e:  # noqa: BLE001 — recovery must never raise
+        log.debug("jax.clear_caches failed during OOM recovery: %s", e)
+    gc.collect()
+
+
+def trial_survives(run: Callable[[int], Any], b: int, *, attempts: int = 2) -> bool:
+    """Execute ``run(b)`` under the OOM retry ladder; True when it completes.
+
+    A first OOM gets one allocator recovery + retry (fragmentation and a
+    genuinely-too-big batch look identical from the exception); a repeat
+    failure reports "does not fit".  Either way the process survives and
+    the allocator is recovered for the next, smaller candidate.  Non-OOM
+    exceptions propagate.
+    """
+    for attempt in range(1, max(attempts, 1) + 1):
+        try:
+            run(b)
+            return True
+        except Exception as e:  # noqa: BLE001 — filtered to OOM below
+            if not is_oom_error(e):
+                raise
+            recover_allocator()
+            if attempt > max(attempts, 1) - 1:
+                log.debug("batch %d exhausts memory in execution "
+                          "(attempt %d/%d)", b, attempt, attempts)
+                return False
+            log.info("batch %d OOMed; allocator recovered, retrying "
+                     "(attempt %d/%d)", b, attempt, attempts)
+    return False
+
+
+def max_batch_by_trial(
+    grad_fn: Callable,
+    params: Any,
+    batch: Any,
+    *,
+    budget_bytes: Optional[int] = DEFAULT_BUDGET_BYTES,
+    hi_cap: int = 65536,
+    reserved_bytes: int = 0,
+    runner: Optional[Callable[[int], Any]] = None,
+    attempts: int = 2,
+) -> int:
+    """Largest physical batch whose clipping step EXECUTES within budget.
+
+    Each candidate runs ``grad_fn`` for real (``runner`` injects the
+    execution for tests — it receives the batch size and must raise on a
+    failed allocation).  When ``budget_bytes`` is set, the compiled-memory
+    model pre-filters candidates first: on a host with more free memory
+    than the budget (CPU certifying for a 16GB device) execution alone
+    cannot observe the budget, and on a real device the cheap compile-time
+    rejection skips doomed allocations.  ``budget_bytes=None`` trusts
+    execution alone.
+    """
+    mem_budget = None
+    if budget_bytes is not None:
+        mem_budget = budget_bytes - reserved_bytes
+        if mem_budget <= 0:
+            log.warning("memory budget entirely consumed by resident state "
+                        "(%.2f GB reserved)", reserved_bytes / 1024**3)
+            return 0
+    p_specs = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+    )
+    if runner is None:
+        jfn = jax.jit(grad_fn)
+
+        def runner(b: int) -> None:
+            jax.block_until_ready(jfn(params, batch_at(batch, b)))
+
+    def fits(b: int) -> bool:
+        if mem_budget is not None:
+            try:
+                mem = compiled_memory_bytes(
+                    grad_fn, p_specs, batch_specs_at(batch, b)
+                )
+            except Exception as e:  # noqa: BLE001 — compile OOM == unfit
+                if is_oom_error(e):
+                    return False
+                raise
+            if mem > mem_budget:
+                log.debug("batch %d rejected by the memory model "
+                          "(%.2f GB)", b, mem / 1024**3)
+                return False
+        return trial_survives(runner, b, attempts=attempts)
+
+    return find_max_physical_batch(fits, hi_cap=hi_cap)
+
+
+def trials_available(params: Any, batch: Any) -> bool:
+    """Trial executions need concrete arrays, not ShapeDtypeStructs."""
+    leaves = jax.tree_util.tree_leaves(params) + jax.tree_util.tree_leaves(batch)
+    return all(
+        not isinstance(x, jax.ShapeDtypeStruct) and hasattr(x, "dtype")
+        for x in leaves
+    )
+
+
+def certify_max_batch(
+    grad_fn: Callable,
+    params: Any,
+    batch: Any,
+    *,
+    budget_bytes: int = DEFAULT_BUDGET_BYTES,
+    hi_cap: int = 65536,
+    reserved_bytes: int = 0,
+    method: Optional[str] = None,
+) -> tuple[int, str]:
+    """(max physical batch, certification method): the search front door.
+
+    ``method`` (or ``REPRO_MAX_BATCH_METHOD``): ``"trial"`` | ``"memory"``
+    | ``"auto"`` (default).  Auto runs real trial executions whenever
+    concrete arrays are available and falls back to the compiled-memory
+    model otherwise — so ``engine.tune`` certifies by execution on the
+    default backend, while spec-only callers (dry runs) keep working.
+    """
+    method = method or os.environ.get("REPRO_MAX_BATCH_METHOD", "auto")
+    if method not in ("auto", "trial", "memory"):
+        raise ValueError(f"unknown max-batch method {method!r}")
+    if method == "trial" and not trials_available(params, batch):
+        raise ValueError("method='trial' needs concrete params/batch arrays")
+    if method != "memory" and trials_available(params, batch):
+        mb = max_batch_by_trial(
+            grad_fn, params, batch, budget_bytes=budget_bytes,
+            hi_cap=hi_cap, reserved_bytes=reserved_bytes,
+        )
+        return mb, "trial"
+    return max_batch_by_memory(
+        grad_fn, params, batch, budget_bytes=budget_bytes, hi_cap=hi_cap,
+        reserved_bytes=reserved_bytes,
+    ), "memory"
 
 
 def derive_accumulation(logical_batch: int, max_physical: int) -> tuple[int, int]:

@@ -454,9 +454,12 @@ def remeasure_at_batch(
     full-batch measurement would exceed it are clamped to the largest batch
     that fits, which preserves the comparison since timings scale ~linearly.
 
-    The plan's recorded kernel winners are kept, not re-raced: the re-timed
-    branches run under them (kernel crossover is far less batch-sensitive
-    than the branch decision — both impls scale with the same terms).
+    Kernel winners are RE-RACED at the rebatched shapes, not carried over
+    from the probe batch: Pallas-vs-XLA crossover moves with rows (grid
+    occupancy and the bank-contraction tile both depend on B), so a plan
+    recorded at the certified batch must carry winners raced there — the
+    re-timed branches then run under those winners and both land in the
+    refreshed plan together.
     """
     rebatched = {}
     clamped = 0
@@ -475,7 +478,17 @@ def remeasure_at_batch(
                  "respect the %.1fGB profiling cap", clamped, physical_batch,
                  cap_bytes / 1024**3)
     cfg_full = dataclasses.replace(cfg, max_rows=None)
-    timings = measure_branches(rebatched, cfg_full, kernels=plan.kernel_map())
+    kernels = measure_kernels(rebatched, cfg_full)
+    old_kernels = plan.kernel_map()
+    kernel_flips = sum(
+        1 for name, ops in kernels.items()
+        for op, impl in ops.items()
+        if old_kernels.get(name, {}).get(op, impl) != impl
+    )
+    if kernel_flips:
+        log.info("re-racing kernels at physical batch %d flipped %d "
+                 "winner(s)", physical_batch, kernel_flips)
+    timings = measure_branches(rebatched, cfg_full, kernels=kernels)
     flips = sum(
         1 for name, b in plan.branches if timings.get(name) and
         timings[name].winner != b
@@ -487,7 +500,8 @@ def remeasure_at_batch(
         log.info("re-measuring at physical batch %d flipped %d branch(es)",
                  physical_batch, flips)
     return dataclasses.replace(
-        plan, measured_at_physical=True, **_plan_fields(timings)
+        plan, measured_at_physical=True, kernels=_kernel_rows(kernels),
+        **_plan_fields(timings)
     )
 
 

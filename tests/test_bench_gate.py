@@ -1,0 +1,108 @@
+"""Step-time floor gate (scripts/bench_dashboard.py --check-step-time).
+
+The gate compares each metric's newest archived row against its closest
+same-host predecessor and fails beyond the percentage budget.  These tests
+drive the pure helpers on synthetic history so the CI wiring is proven
+without benchmarking anything: an injected +20%-plus regression MUST fail,
+same-host improvements and cross-host drift MUST pass, and the
+``BENCH_STEP_TIME_WAIVER`` escape hatch must downgrade failure to a
+warning.
+"""
+import importlib.util
+import pathlib
+import sys
+
+_SCRIPT = pathlib.Path(__file__).resolve().parent.parent / "scripts" / "bench_dashboard.py"
+_spec = importlib.util.spec_from_file_location("bench_dashboard", _SCRIPT)
+dashboard = importlib.util.module_from_spec(_spec)
+sys.modules.setdefault("bench_dashboard", dashboard)
+_spec.loader.exec_module(dashboard)
+
+
+def _row(name, us, host="x86_64-8-cpu"):
+    row = {"name": name, "us_per_call": us, "derived": ""}
+    if host is not None:
+        row["host"] = host
+    return row
+
+
+# two commits, aaaaaaa older than bbbbbbb
+ORDER = {"aaaaaaa" + "0" * 33: 0, "bbbbbbb" + "0" * 33: 1}
+
+
+def _history(old_us, new_us, *, old_host="x86_64-8-cpu",
+             new_host="x86_64-8-cpu"):
+    return {
+        "modes": {
+            "aaaaaaa": [_row("modes_cnn_bk_mixed", old_us, old_host)],
+            "bbbbbbb": [_row("modes_cnn_bk_mixed", new_us, new_host)],
+        }
+    }
+
+
+def test_gate_fails_on_injected_regression():
+    """+25% same-host step time against a 20% budget is an offense."""
+    offenses = dashboard.step_time_regressions(
+        _history(100_000.0, 125_000.0), ORDER, 20.0
+    )
+    assert len(offenses) == 1
+    assert "modes_cnn_bk_mixed" in offenses[0]
+    assert dashboard.check_step_time(
+        _history(100_000.0, 125_000.0), ORDER, 20.0
+    ) == 1
+
+
+def test_gate_passes_within_budget_and_on_improvement():
+    for new in (80_000.0, 100_000.0, 119_000.0):
+        assert dashboard.step_time_regressions(
+            _history(100_000.0, new), ORDER, 20.0
+        ) == []
+    assert dashboard.check_step_time(
+        _history(100_000.0, 80_000.0), ORDER, 20.0
+    ) == 0
+
+
+def test_gate_never_pairs_across_hosts_or_stampless_rows():
+    """Cross-host drift is noise, not regression; legacy rows without the
+    host stamp (pre-harness artifacts) never participate."""
+    cross = _history(100_000.0, 200_000.0, old_host="arm64-4-cpu")
+    assert dashboard.step_time_regressions(cross, ORDER, 20.0) == []
+    legacy = _history(100_000.0, 200_000.0, old_host=None)
+    assert dashboard.step_time_regressions(legacy, ORDER, 20.0) == []
+    unstamped_new = _history(100_000.0, 200_000.0, new_host=None)
+    assert dashboard.step_time_regressions(unstamped_new, ORDER, 20.0) == []
+
+
+def test_gate_compares_against_closest_same_host_row():
+    """An intervening cross-host row is skipped; the newest row still pairs
+    with the older same-host baseline behind it."""
+    order = dict(ORDER)
+    order["ccccccc" + "0" * 33] = 2
+    history = {
+        "modes": {
+            "aaaaaaa": [_row("m", 100_000.0)],
+            "bbbbbbb": [_row("m", 50_000.0, host="arm64-4-cpu")],
+            "ccccccc": [_row("m", 130_000.0)],
+        }
+    }
+    offenses = dashboard.step_time_regressions(history, order, 20.0)
+    assert len(offenses) == 1 and "aaaaaaa" in offenses[0]
+
+
+def test_gate_waiver_downgrades_failure():
+    history = _history(100_000.0, 125_000.0)
+    assert dashboard.check_step_time(history, ORDER, 20.0) == 1
+    assert dashboard.check_step_time(
+        history, ORDER, 20.0, waiver="intentional: traded time for memory"
+    ) == 0
+
+
+def test_gate_ignores_ratio_rows():
+    """Rows with us_per_call=0 (ratios, derived-only) carry no step time."""
+    history = {
+        "modes": {
+            "aaaaaaa": [_row("speedup", 0.0)],
+            "bbbbbbb": [_row("speedup", 0.0)],
+        }
+    }
+    assert dashboard.step_time_regressions(history, ORDER, 20.0) == []

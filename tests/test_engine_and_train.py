@@ -98,3 +98,20 @@ def test_train_cli_poisson(tmp_path):
         "--seq", "16", "--poisson", "--log-every", "1",
     ]
     assert main(argv) == 0
+
+
+def test_train_cli_accumulation_path(tmp_path, monkeypatch):
+    """--tune with a hi-cap of 1 forces physical=1, accum=2: the donated-
+    accumulator loop must run end-to-end (init/micro/finalize AOT programs,
+    one host sync per logical batch) and checkpoint at the requested step."""
+    from repro.checkpoint import latest_step
+    from repro.launch.train import main
+
+    monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path / "plans"))
+    argv = [
+        "--arch", "xlstm-350m", "--reduced", "--steps", "2", "--batch", "2",
+        "--seq", "16", "--tune", "--tune-hi-cap", "1", "--log-every", "1",
+        "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+    ]
+    assert main(argv) == 0
+    assert latest_step(tmp_path) == 2

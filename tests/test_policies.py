@@ -460,3 +460,64 @@ def test_engine_tune_stamps_policy_fingerprint(tmp_path):
     )
     assert plan2.policy_fingerprint == policy.fingerprint()
     assert plan2.agreed_ranks == 1
+
+
+# ------------------------- quantile denominator under Poisson subsampling --
+def test_quantile_denominator_is_static_under_poisson_mask():
+    """b_t divides by the STATIC batch shape, never the (private) mask sum.
+
+    With 3 of 8 samples Poisson-selected and every selected norm below R,
+    a mask-sum denominator would say b=1.0 (quantile reached); the
+    data-independent denominator says b=3/8.  The update must match the
+    closed form exactly.
+    """
+    q, lr = 0.5, 0.2
+    policy = QuantilePolicy(target_quantile=q, lr=lr, release_sigma=0.0,
+                            init_clip_norm=1.0)
+    norms = jnp.asarray([0.1, 0.2, 0.3, 9.0, 9.0, 9.0, 9.0, 9.0])
+    mask = jnp.asarray([1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0])
+    state, _ = policy.update(policy.init_state(), norms, mask=mask)
+    expected = 1.0 * np.exp(-lr * (3.0 / 8.0 - q))
+    np.testing.assert_allclose(float(state["clip_norm"]), expected, rtol=1e-6)
+
+
+@pytest.mark.parametrize("physical", [1, 2])
+def test_quantile_empty_poisson_round_at_tiny_batch(physical):
+    """A tiny physical batch where Poisson sampled NOTHING: b=0 and R grows
+    by exactly exp(lr*q) — no NaN from an empty-mask denominator."""
+    q, lr = 0.6, 0.25
+    policy = QuantilePolicy(target_quantile=q, lr=lr, release_sigma=0.0,
+                            init_clip_norm=2.0)
+    norms = jnp.full((physical,), 0.5)  # below R, but masked out
+    mask = jnp.zeros((physical,))
+    state, _ = policy.update(policy.init_state(), norms, mask=mask)
+    r = float(state["clip_norm"])
+    assert np.isfinite(r)
+    np.testing.assert_allclose(r, 2.0 * np.exp(lr * q), rtol=1e-6)
+
+
+def test_quantile_scattered_logical_batch_matches_direct_update():
+    """The accumulation path scatters per-microbatch norms/masks into one
+    flat logical-batch buffer (launch.steps.make_accum_microstep) and
+    updates once; the result must equal a direct update on the concatenated
+    batch, in any microbatch order (the count is permutation-invariant)."""
+    policy = QuantilePolicy(target_quantile=0.5, lr=0.2, release_sigma=0.0,
+                            init_clip_norm=1.0)
+    key = jax.random.PRNGKey(3)
+    norms = jax.random.uniform(key, (8,), minval=0.0, maxval=2.0)
+    mask = (jax.random.uniform(jax.random.PRNGKey(4), (8,)) < 0.4).astype(
+        jnp.float32
+    )
+    s0 = policy.init_state()
+    direct, _ = policy.update(s0, norms, mask=mask)
+    # scatter microbatches of 2 into the flat buffers, reversed order
+    flat_n = jnp.zeros((8,))
+    flat_m = jnp.zeros((8,))
+    for i in reversed(range(4)):
+        off = (i * 2,)
+        flat_n = jax.lax.dynamic_update_slice(flat_n, norms[i * 2:i * 2 + 2], off)
+        flat_m = jax.lax.dynamic_update_slice(flat_m, mask[i * 2:i * 2 + 2], off)
+    scattered, _ = policy.update(s0, flat_n, mask=flat_m)
+    np.testing.assert_allclose(
+        float(scattered["clip_norm"]), float(direct["clip_norm"]), rtol=1e-7
+    )

@@ -565,3 +565,185 @@ def test_max_batch_by_memory_monotone_model():
     assert max_batch_by_memory(
         grad_fn, params, batch, budget_bytes=0, hi_cap=8
     ) == 0
+
+
+# ------------------------------------------------- trial-based max batch --
+def test_max_batch_trial_survives_simulated_oom():
+    """The retry ladder reports 'does not fit' and keeps the process alive."""
+    from repro.tuner import max_batch_by_trial
+
+    model, params, batch = _two_layer_setup()
+    grad_fn = dp_value_and_clipped_grad(model.loss_with_ctx, ClipConfig())
+    calls = []
+
+    def runner(b):
+        calls.append(b)
+        if b > 6:
+            raise RuntimeError(
+                "RESOURCE_EXHAUSTED: Out of memory while trying to allocate"
+            )
+
+    got = max_batch_by_trial(
+        grad_fn, params, batch, budget_bytes=None, hi_cap=64, runner=runner
+    )
+    assert got == 6
+    # every failing size was retried once (ladder) before being ruled out
+    assert calls.count(8) == 2 and calls.count(7) == 2
+    # non-OOM failures must NOT be swallowed as "does not fit"
+    def broken(b):
+        raise ValueError("shape mismatch")
+
+    with pytest.raises(ValueError):
+        max_batch_by_trial(
+            grad_fn, params, batch, budget_bytes=None, hi_cap=4, runner=broken
+        )
+
+
+def test_max_batch_trial_retries_transient_oom():
+    """One flaky OOM (fragmentation) recovers; only a repeat rules a size out."""
+    from repro.tuner.max_batch import trial_survives
+
+    failed_once = set()
+
+    def flaky(b):
+        if b not in failed_once:
+            failed_once.add(b)
+            raise RuntimeError("RESOURCE_EXHAUSTED")
+
+    assert trial_survives(flaky, 8, attempts=2)
+
+    def always(b):
+        raise RuntimeError("RESOURCE_EXHAUSTED")
+
+    assert not trial_survives(always, 8, attempts=2)
+
+
+def test_max_batch_trial_converges_to_memory_model():
+    """When both drivers apply (CPU executions always fit; the budget binds
+    through the pre-filter), the trial search lands on the memory answer."""
+    from repro.tuner import max_batch_by_trial
+
+    model, params, batch = _two_layer_setup()
+    grad_fn = dp_value_and_clipped_grad(model.loss_with_ctx, ClipConfig())
+    for budget in (1 << 34, 1 << 22):
+        by_mem = max_batch_by_memory(
+            grad_fn, params, batch, budget_bytes=budget, hi_cap=8
+        )
+        by_trial = max_batch_by_trial(
+            grad_fn, params, batch, budget_bytes=budget, hi_cap=8
+        )
+        assert by_trial == by_mem
+
+
+def test_certify_max_batch_method_selection(monkeypatch):
+    """Concrete arrays certify by execution; specs fall back to the model."""
+    from repro.tuner import certify_max_batch
+
+    model, params, batch = _two_layer_setup()
+    grad_fn = dp_value_and_clipped_grad(model.loss_with_ctx, ClipConfig())
+    b, method = certify_max_batch(
+        grad_fn, params, batch, budget_bytes=1 << 34, hi_cap=8
+    )
+    assert (b, method) == (8, "trial")
+
+    specs = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), (params, batch)
+    )
+    b2, method2 = certify_max_batch(
+        grad_fn, specs[0], specs[1], budget_bytes=1 << 34, hi_cap=8
+    )
+    assert (b2, method2) == (8, "memory")
+    # explicit trial on specs is a hard error, not a silent fallback
+    with pytest.raises(ValueError):
+        certify_max_batch(
+            grad_fn, specs[0], specs[1], budget_bytes=1 << 34, hi_cap=8,
+            method="trial",
+        )
+    # env override forces the model even with concrete arrays
+    monkeypatch.setenv("REPRO_MAX_BATCH_METHOD", "memory")
+    _, method3 = certify_max_batch(
+        grad_fn, params, batch, budget_bytes=1 << 34, hi_cap=8
+    )
+    assert method3 == "memory"
+
+
+def test_remeasure_at_batch_reraces_stale_kernel_winners():
+    """Plan staleness: kernel winners recorded at the probe batch are NOT
+    carried into the certified-batch plan — remeasure re-races them there."""
+    from repro.tuner.plan import KERNEL_IMPLS
+
+    model, params, batch = _two_layer_setup()
+    metas = discover_meta(model.loss_with_ctx, params, batch)
+    cfg = MeasureConfig(repeats=1, warmup=1, max_rows=2)
+    plan = build_plan(metas, measure=cfg, arch="twolayer")
+    assert plan.kernels  # v5 plans always record the raced winners
+    # poison the recorded winners with an impl the race could never pick
+    # here (pallas is TPU-only; this host races xla alone)
+    stale = dataclasses.replace(
+        plan,
+        kernels=tuple((n, op, "pallas") for n, op, _ in plan.kernels),
+    )
+    fresh = remeasure_at_batch(stale, metas, 8, cfg)
+    assert fresh.measured_at_physical
+    # same taps/ops covered, every winner re-raced to a locally valid impl
+    assert {(n, op) for n, op, _ in fresh.kernels} == {
+        (n, op) for n, op, _ in plan.kernels
+    }
+    assert all(impl in KERNEL_IMPLS for _, _, impl in fresh.kernels)
+    assert all(impl != "pallas" for _, _, impl in fresh.kernels)
+
+
+def test_accum_microsteps_match_full_train_step():
+    """Donated-accumulator path == one train_step on the full logical batch.
+
+    Two microbatches of 2 folded through make_accum_microstep (scattered
+    norms, summed grads) and finalized must reproduce the single-shot
+    make_train_step update: same rng split discipline -> identical noise,
+    per-sample clipping -> grad sums equal, metrics (loss, clip_frac)
+    equal.  This is the correctness half of the donation/overlap change.
+    """
+    from repro.launch.steps import (
+        DPTrainConfig,
+        make_accum_finalize,
+        make_accum_init,
+        make_accum_microstep,
+        make_clipped_microstep,
+        make_train_step,
+    )
+    from repro.optim import adam, warmup_cosine
+    from repro.policies.fixed import FixedPolicy
+
+    model, params, batch = _two_layer_setup()  # logical batch of 4
+    opt = adam()
+    sched = warmup_cosine(1e-3, 1, 10)
+    dp = DPTrainConfig(clipping_mode="mixed_ghost", clip_norm=1.0,
+                       noise_multiplier=0.7, logical_batch=4,
+                       accumulation_steps=2)
+    policy = FixedPolicy(clip_norm=1.0, clip_fn="abadi")
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32), "rng": jax.random.PRNGKey(7),
+             "policy": policy.init_state()}
+
+    full_state, full_metrics = make_train_step(model, opt, sched, dp)(
+        dict(state), batch
+    )
+
+    half = jax.tree_util.tree_map(lambda x: x[:2], batch)
+    g_spec = jax.eval_shape(
+        make_clipped_microstep(model, dp), params, half, state["policy"]
+    )[1]
+    acc = make_accum_init(g_spec, 4)()
+    micro = make_accum_microstep(model, dp)
+    for i in range(2):
+        sub = jax.tree_util.tree_map(lambda x: x[i * 2:(i + 1) * 2], batch)
+        acc = micro(state["params"], state["policy"], acc, sub,
+                    jnp.asarray(i, jnp.int32))
+    acc_state, acc_metrics = make_accum_finalize(opt, sched, dp)(
+        dict(state), acc
+    )
+
+    assert max_tree_diff(acc_state["params"], full_state["params"]) < 1e-5
+    assert max_tree_diff(acc_state["opt"], full_state["opt"]) < 1e-5
+    assert abs(float(acc_metrics["loss"]) - float(full_metrics["loss"])) < 1e-5
+    assert abs(float(acc_metrics["clip_frac"])
+               - float(full_metrics["clip_frac"])) < 1e-6
