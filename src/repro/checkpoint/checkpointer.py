@@ -24,7 +24,9 @@ from repro.utils.tree import flatten_dict, unflatten_dict
 
 log = get_logger("checkpoint")
 
-_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+# full-name match: ".tmp_step_5.npz" (an in-flight or torn temp file) must
+# never be reported as a restorable step
+_STEP_RE = re.compile(r"step_(\d+)\.npz")
 FORMAT_VERSION = 1
 
 
@@ -57,7 +59,7 @@ def latest_step(directory: str | os.PathLike) -> Optional[int]:
     d = pathlib.Path(directory)
     if not d.exists():
         return None
-    steps = [int(m.group(1)) for p in d.iterdir() if (m := _STEP_RE.search(p.name))]
+    steps = [int(m.group(1)) for p in d.iterdir() if (m := _STEP_RE.fullmatch(p.name))]
     return max(steps) if steps else None
 
 

@@ -1,10 +1,26 @@
-"""Checkpoint lifecycle: rotation, async save, preemption flush."""
+"""Checkpoint lifecycle: rotation, async save, preemption flush.
+
+Concurrency contract: ``save`` may hand the write (and the rotation that
+follows it) to a background thread while the train loop keeps stepping and
+— on a crash path — while ``latest_step``/``restore`` scan the same
+directory.  All directory mutation and scanning therefore runs under one
+instance lock, and every filename check is a *full* match anchored to the
+``step_N.{npz,json}`` pattern, so in-flight temp files (``.tmp_step_N.npz``)
+and stray droppings never masquerade as restorable checkpoints.
+
+Restore is fall-back-capable: a torn or corrupted newest checkpoint (power
+loss mid-fsync, an injected ``torn@step`` fault) is skipped with a warning
+and the previous rotated step is loaded instead — a damaged artifact costs
+recomputed steps, never the run.
+"""
 from __future__ import annotations
 
 import pathlib
 import re
 import threading
-from typing import Any, Optional
+import zlib
+import zipfile
+from typing import Any, Callable, Optional
 
 import jax
 
@@ -12,7 +28,20 @@ from repro.checkpoint.checkpointer import latest_step, restore_checkpoint, save_
 from repro.utils.logging import get_logger
 
 log = get_logger("ckpt-manager")
-_STEP_RE = re.compile(r"step_(\d+)\.(npz|json)$")
+_STEP_RE = re.compile(r"step_(\d+)\.(npz|json)")
+
+# what a torn/corrupt artifact raises out of np.load / unflatten: zip-layer
+# damage, truncated members, bad headers, missing leaves.  FileNotFoundError
+# (a step rotated away between scan and open) is an OSError and also lands
+# here — fall back rather than die.
+CORRUPT_CHECKPOINT_ERRORS = (
+    zipfile.BadZipFile,
+    zlib.error,
+    EOFError,
+    OSError,
+    ValueError,
+    KeyError,
+)
 
 
 class CheckpointManager:
@@ -23,12 +52,19 @@ class CheckpointManager:
         save_every: int = 100,
         keep: int = 3,
         async_save: bool = True,
+        on_saved: Optional[Callable[[int, pathlib.Path], None]] = None,
     ):
         self.dir = pathlib.Path(directory)
         self.save_every = save_every
         self.keep = keep
         self.async_save = async_save
+        # test/CI seam (runtime.inject): called with (step, npz_path) after
+        # the write + rotation complete — on the writer thread when async
+        self.on_saved = on_saved
         self._pending: Optional[threading.Thread] = None
+        # serializes directory mutation (write+rotate, possibly on the
+        # writer thread) against scans (latest/restore/available_steps)
+        self._io_lock = threading.Lock()
 
     def should_save(self, step: int) -> bool:
         return step > 0 and step % self.save_every == 0
@@ -49,27 +85,68 @@ class CheckpointManager:
             self._write(step, host_state)
 
     def _write(self, step: int, state: Any) -> None:
-        save_checkpoint(self.dir, step, state)
-        self._rotate()
+        with self._io_lock:
+            path = save_checkpoint(self.dir, step, state)
+            self._rotate()
+        if self.on_saved is not None:
+            self.on_saved(step, path)
 
     def wait(self) -> None:
         if self._pending is not None:
             self._pending.join()
             self._pending = None
 
+    def _steps_on_disk(self) -> list[int]:
+        """Sorted completed-checkpoint steps; temp/stray files skipped."""
+        if not self.dir.exists():
+            return []
+        steps = set()
+        for p in self.dir.iterdir():
+            m = _STEP_RE.fullmatch(p.name)
+            if m:
+                steps.add(int(m.group(1)))
+        return sorted(steps)
+
+    def available_steps(self) -> list[int]:
+        with self._io_lock:
+            return self._steps_on_disk()
+
     def _rotate(self) -> None:
-        steps = sorted(
-            {int(m.group(1)) for p in self.dir.iterdir() if (m := _STEP_RE.search(p.name))}
-        )
+        # caller holds _io_lock
+        steps = self._steps_on_disk()
         for old in steps[: -self.keep] if self.keep else []:
             for suffix in ("npz", "json"):
                 p = self.dir / f"step_{old}.{suffix}"
-                if p.exists():
-                    p.unlink()
+                try:
+                    p.unlink(missing_ok=True)
+                except OSError as e:  # a racing scan/unlink is not fatal
+                    log.warning("rotation could not remove %s: %s", p, e)
             log.info("rotated out checkpoint step=%d", old)
 
     def latest(self) -> Optional[int]:
-        return latest_step(self.dir)
+        with self._io_lock:
+            return latest_step(self.dir)
 
     def restore(self, *, shardings: Any = None, step: Optional[int] = None):
-        return restore_checkpoint(self.dir, step, shardings=shardings)
+        """Restore ``step`` (or the newest *readable* checkpoint).
+
+        With ``step=None`` a torn/corrupt newest artifact falls back to the
+        previous rotated step; an explicit ``step`` is the caller asserting
+        that exact artifact, so damage propagates as the raw error.
+        """
+        with self._io_lock:
+            if step is not None:
+                return restore_checkpoint(self.dir, step, shardings=shardings)
+            candidates = self._steps_on_disk()
+            for s in reversed(candidates):
+                try:
+                    return restore_checkpoint(self.dir, s, shardings=shardings)
+                except CORRUPT_CHECKPOINT_ERRORS as e:
+                    log.warning(
+                        "checkpoint step=%d unreadable (%s: %s); falling back "
+                        "to the previous step", s, type(e).__name__, e,
+                    )
+            raise FileNotFoundError(
+                f"no readable checkpoints under {self.dir} "
+                f"(scanned steps {candidates})"
+            )

@@ -73,7 +73,14 @@ class RDPAccountant:
         self._rdp = np.zeros(len(self.alphas))
 
     def step(self, *, q: float, sigma: float, steps: int = 1) -> None:
-        self._rdp = self._rdp + steps * rdp_subsampled_gaussian(q, sigma, self.alphas)
+        # compose one step at a time, not as `steps * rdp`: float addition is
+        # not distributive over that multiply, and bit-exact resume (a crash
+        # at step k replays `step(steps=k)` and must land on EXACTLY the
+        # epsilon trajectory of the uninterrupted run) depends on replaying
+        # the same additions in the same order
+        r = rdp_subsampled_gaussian(q, sigma, self.alphas)
+        for _ in range(steps):
+            self._rdp = self._rdp + r
 
     def get_epsilon(self, delta: float) -> float:
         eps, _ = eps_from_rdp(self._rdp, self.alphas, delta)

@@ -369,10 +369,19 @@ class PrivacyEngine:
 
     # -- accounting --------------------------------------------------------
     def record_step(self, n: int = 1) -> None:
-        """Compose n steps: the gradient mechanism + any policy release."""
-        self.accountant.step(q=self.sampling_rate, sigma=self.noise_multiplier, steps=n)
-        for rs in self._release_sigmas():
-            self.accountant.step(q=self.sampling_rate, sigma=rs, steps=n)
+        """Compose n steps: the gradient mechanism + any policy release.
+
+        Composed one step at a time, gradient-then-release, so a resume
+        that replays ``record_step(start_step)`` performs the identical
+        float additions (same order) as the uninterrupted run — the
+        accountant's epsilon is bit-exact across restarts.
+        """
+        for _ in range(n):
+            self.accountant.step(
+                q=self.sampling_rate, sigma=self.noise_multiplier, steps=1
+            )
+            for rs in self._release_sigmas():
+                self.accountant.step(q=self.sampling_rate, sigma=rs, steps=1)
 
     def privacy_spent(self, steps: Optional[int] = None) -> tuple[float, float]:
         if steps is not None:

@@ -31,9 +31,11 @@ analytic rule on one rank while its peers trace the plan.
 from __future__ import annotations
 
 import argparse
-import dataclasses
+import json
+import pathlib
 import sys
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +59,9 @@ from repro.launch.steps import (
 from repro.optim import adam, warmup_cosine
 from repro.parallel.reshard import use_reshard_rules
 from repro.parallel.sharding import batch_shardings, state_shardings
+from repro.runtime.elastic import current_data_shards, elastic_plan
 from repro.runtime.fault import PreemptionHandler, StepWatchdog
+from repro.runtime.inject import InjectionPlan
 from repro.utils.logging import get_logger
 
 log = get_logger("train")
@@ -105,7 +109,19 @@ def parse_args(argv=None):
     ap.add_argument("--auto-restart", type=int, default=0,
                     help="supervise and restart up to N times on failure")
     ap.add_argument("--fail-at-step", type=int, default=None,
-                    help="fault injection: raise at this step (tests)")
+                    help="fault injection: raise at this step (tests); "
+                         "shorthand for --inject crash@STEP")
+    ap.add_argument("--inject", default=None,
+                    help="deterministic fault injection spec "
+                         "(runtime.inject), e.g. 'crash@5,torn@4' or "
+                         "'shrink@5:1'; merged with $REPRO_FAULT_INJECT")
+    ap.add_argument("--data-shards", type=int, default=0,
+                    help="data-parallel degree of the fleet (0 = "
+                         "$REPRO_ELASTIC_SHARDS, else 1); the elastic "
+                         "replan keeps the logical batch across resizes")
+    ap.add_argument("--elastic-max-per-shard", type=int, default=0,
+                    help="per-shard microbatch cap for the elastic replan "
+                         "(0 = the tuned/physical microbatch)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--tune", action="store_true",
                     help="profile ghost-vs-instantiate per tap and search the "
@@ -124,7 +140,29 @@ def parse_args(argv=None):
     return ap.parse_args(argv)
 
 
-def run_once(args) -> int:
+def _injection_for(args) -> InjectionPlan:
+    """One InjectionPlan per process: ``--inject`` + env, with the legacy
+    ``--fail-at-step N`` folded in as a ``crash@N`` injector.  Injectors are
+    one-shot, so in-process ``--auto-restart`` attempts share the plan and a
+    fault that already fired does not re-fire after the restart."""
+    plan = InjectionPlan.from_spec(args.inject)
+    if args.fail_at_step is not None:
+        plan.add_crash(args.fail_at_step)
+    return plan
+
+
+def _write_summary(ckpt_dir: str, **fields) -> None:
+    """Machine-readable run outcome next to the checkpoints (tests compare
+    the privacy spend of interrupted vs uninterrupted runs through this)."""
+    path = pathlib.Path(ckpt_dir) / "summary.json"
+    tmp = path.with_name(".tmp_summary.json")
+    tmp.write_text(json.dumps(fields, sort_keys=True))
+    tmp.replace(path)
+
+
+def run_once(args, injection: Optional[InjectionPlan] = None) -> int:
+    if injection is None:
+        injection = _injection_for(args)
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -331,6 +369,29 @@ def run_once(args) -> int:
         if plan is not None:
             engine.use_plan(plan)
 
+    # elastic fleet layout (runtime.elastic): recomputed on EVERY start —
+    # including every --auto-restart attempt — from the shard count the
+    # fleet actually has now ($REPRO_ELASTIC_SHARDS is the restart-time
+    # seam; a scheduler or a shrink@step injector updates it between
+    # attempts).  The logical batch (and with it the sampling rate q the
+    # accountant composes) never changes; lost parallelism becomes extra
+    # accumulation microsteps of the SAME per-shard microbatch, so a resumed
+    # run replays the identical microbatch stream bit for bit.
+    data_shards = current_data_shards(args.data_shards)
+    if data_shards > 1 or args.elastic_max_per_shard:
+        eplan = elastic_plan(
+            logical_batch=logical_eff,
+            data_shards=data_shards,
+            max_per_shard=args.elastic_max_per_shard or physical,
+        )
+        physical, accum = eplan.execution(jax.process_count())
+        log.info(
+            "elastic layout: %d shard(s) x per-shard %d (accum %d) -> "
+            "microbatch %d, %d microstep(s) per logical batch of %d",
+            eplan.data_shards, eplan.per_shard_batch,
+            eplan.accumulation_steps, physical, accum, logical_eff,
+        )
+
     if args.consensus:
         # decisions derived rank-locally AFTER plan adoption — the --mode
         # auto re-certification (which can fall back per rank when nothing
@@ -370,7 +431,10 @@ def run_once(args) -> int:
     start_step = 0
     manager = None
     if args.ckpt_dir:
-        manager = CheckpointManager(args.ckpt_dir, save_every=args.ckpt_every)
+        manager = CheckpointManager(
+            args.ckpt_dir, save_every=args.ckpt_every,
+            on_saved=injection.on_checkpoint_saved if injection else None,
+        )
         if args.resume and manager.latest() is not None:
             # restore to host first: a pre-policy checkpoint lacks the
             # state["policy"] subtree the sharding tree now carries, so
@@ -459,14 +523,12 @@ def run_once(args) -> int:
             if accum == 1:
                 step_idx, batch = pipeline.next()
                 watchdog.start_step()
-                if args.fail_at_step is not None and step_idx == args.fail_at_step:
-                    raise RuntimeError(f"injected fault at step {step_idx}")
+                injection.on_step(step_idx)
                 state, metrics = jit_step(state, batch)
             else:
                 watchdog.start_step()
                 step_idx = step
-                if args.fail_at_step is not None and step_idx == args.fail_at_step:
-                    raise RuntimeError(f"injected fault at step {step_idx}")
+                injection.on_step(step_idx)
                 # every microstep is async dispatch into the donated
                 # accumulator; nothing on the host reads a device value, so
                 # the bank reductions of microstep i overlap the dispatch
@@ -500,32 +562,83 @@ def run_once(args) -> int:
                 manager.save(step, state)
     finally:
         pipeline.stop()
+        preempt.uninstall()
         if manager is not None:
             manager.save(step, state, force=True)
             manager.wait()
     eps, delta = engine.privacy_spent()
     log.info("done: %d steps, privacy spent (eps=%.3f, delta=%.1e)", step, eps, delta)
+    if args.ckpt_dir:
+        _write_summary(
+            args.ckpt_dir, step=step, epsilon=eps, delta=delta,
+            logical_batch=logical_eff, microbatch=physical,
+            accumulation_steps=accum, data_shards=data_shards,
+        )
     return 0
+
+
+# Deterministic failure classes: a config/shape/assertion error fails
+# identically on every attempt, so restarting it only burns the budget a
+# real transient (preempted host, flaky storage, injected crash) needs.
+_NON_RETRYABLE = (
+    AssertionError,
+    ValueError,
+    TypeError,
+    KeyError,
+    AttributeError,
+    ImportError,
+    NotImplementedError,
+)
+
+
+def is_retryable_failure(exc: BaseException) -> bool:
+    """Should the --auto-restart supervisor retry after ``exc``?
+
+    Consensus failures are deterministic fleet-configuration divergence
+    (every restart re-derives the same mismatch), so they are classified
+    non-retryable alongside the stdlib config-error types above.
+    """
+    try:
+        from repro.tuner.consensus import PlanConsensusError
+    except ImportError:  # pragma: no cover - tuner always ships
+        PlanConsensusError = ()
+    if isinstance(exc, PlanConsensusError):
+        return False
+    return not isinstance(exc, _NON_RETRYABLE)
 
 
 def main(argv=None) -> int:
     args = parse_args(argv)
+    # ONE injection plan for the whole supervision loop: injectors are
+    # one-shot, so a crash that already fired does not re-fire after the
+    # in-process restart (no args surgery needed)
+    injection = _injection_for(args)
     if args.auto_restart <= 0:
-        return run_once(args)
+        return run_once(args, injection)
     attempts = 0
     while True:
         try:
-            return run_once(args)
+            return run_once(args, injection)
         except Exception as e:  # noqa: BLE001 — supervision loop
+            if not is_retryable_failure(e):
+                log.error(
+                    "non-retryable failure (%s: %s): a deterministic "
+                    "config/assertion error would fail every attempt — not "
+                    "burning the %d-restart budget",
+                    type(e).__name__, e, args.auto_restart,
+                )
+                raise
             attempts += 1
             if attempts > args.auto_restart:
                 log.error("giving up after %d restarts", attempts - 1)
                 raise
             log.warning("run failed (%s); auto-restart %d/%d from latest checkpoint",
                         e, attempts, args.auto_restart)
-            args = dataclasses.replace(args) if dataclasses.is_dataclass(args) else args
+            # an actual copy: the previous `dataclasses.replace(args) if
+            # is_dataclass(args) else args` was a no-op on an
+            # argparse.Namespace, silently mutating the caller's args
+            args = argparse.Namespace(**vars(args))
             args.resume = True
-            args.fail_at_step = None  # injected fault only fires once
             time.sleep(0.5)
 
 

@@ -1,4 +1,14 @@
 from repro.runtime.fault import StepWatchdog, PreemptionHandler, retry
-from repro.runtime.elastic import elastic_plan
+from repro.runtime.elastic import ElasticPlan, current_data_shards, elastic_plan
+from repro.runtime.inject import InjectedCrash, InjectionPlan
 
-__all__ = ["StepWatchdog", "PreemptionHandler", "retry", "elastic_plan"]
+__all__ = [
+    "StepWatchdog",
+    "PreemptionHandler",
+    "retry",
+    "ElasticPlan",
+    "current_data_shards",
+    "elastic_plan",
+    "InjectedCrash",
+    "InjectionPlan",
+]

@@ -67,16 +67,34 @@ class PreemptionHandler:
         self._flag = threading.Event()
         self._signals = signals
         self._installed = False
+        self._previous: dict = {}
 
     def install(self) -> "PreemptionHandler":
         if not self._installed:
             for sig in self._signals:
                 try:
-                    signal.signal(sig, self._handle)
+                    self._previous[sig] = signal.signal(sig, self._handle)
                 except ValueError:
                     pass  # non-main thread (tests)
             self._installed = True
         return self
+
+    def uninstall(self) -> None:
+        """Restore the dispositions ``install`` replaced.
+
+        The train loop calls this on the way out so a later SIGTERM hits
+        whatever the host process had installed — not a stale flag on a
+        handler whose run already exited (matters for in-process
+        ``--auto-restart`` attempts and for test runners).
+        """
+        if self._installed:
+            for sig, prev in self._previous.items():
+                try:
+                    signal.signal(sig, prev)
+                except ValueError:
+                    pass
+            self._previous = {}
+            self._installed = False
 
     def _handle(self, signum, frame):
         log.warning("received signal %s: requesting graceful stop", signum)

@@ -53,6 +53,9 @@ on one host and ``--import-plan`` + ``verify_adopted`` on the rest.
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import json
+import os
 import statistics
 from typing import Any, Callable, Mapping, Optional, Sequence
 
@@ -119,31 +122,105 @@ def plan_step_cost_us(plan: ClipPlan) -> Optional[float]:
 
 
 # -- gather primitives ----------------------------------------------------
-def default_gather(payload: dict) -> list[dict]:
-    """All-gather one JSON-able payload per process over the jax fleet.
+# monotonically increasing gather id: every rank runs the consensus phases
+# in the same order (the protocol is SPMD), so the n-th gather on one rank
+# pairs with the n-th gather on every other rank
+_GATHER_SEQ = itertools.count()
 
-    Single-process: the identity (no collectives, no jax.distributed
-    requirement — the path every test and single-host run takes).
-    Multi-process: plan bytes are length-padded uint8 arrays all-gathered
-    via ``multihost_utils`` on the processes backing the existing mesh; two
-    rounds (max-length, then data) keep the collective shape static.
+# a hung peer must fail the fleet loudly, not stall it: every blocking
+# coordination-service read is bounded by this (override per environment;
+# CI uses a tight budget so a wedged collective fails the job fast)
+ENV_GATHER_TIMEOUT_MS = "REPRO_CONSENSUS_TIMEOUT_MS"
+DEFAULT_GATHER_TIMEOUT_MS = 120_000
+
+
+def _coordination_client():
+    """The jax.distributed coordination-service client, or None.
+
+    Set by ``jax.distributed.initialize`` on every process of a real fleet;
+    reaching into ``jax._src`` is deliberate — the coordination service has
+    no public KV API yet, and the alternative (device collectives) cannot
+    even run on CPU fleets (XLA: "Multiprocess computations aren't
+    implemented on the CPU backend").
     """
-    if jax.process_count() == 1:
-        return [payload]
-    import json as _json
+    try:
+        from jax._src import distributed
 
+        return distributed.global_state.client
+    except Exception:  # pragma: no cover - jax internals moved
+        return None
+
+
+def _kv_allgather(payload: dict, client) -> list[dict]:
+    """All-gather JSON payloads through the coordination-service KV store.
+
+    Control-plane bytes (plan JSON, hashes, certify values) never need a
+    device collective: each rank publishes under a sequenced key and
+    blocking-reads every peer's.  Works on any backend — including
+    2-process CPU fleets in CI, where XLA has no multiprocess computations
+    at all — and a missing peer raises ``PlanConsensusError`` after the
+    bounded timeout instead of deadlocking the fleet.
+    """
+    seq = next(_GATHER_SEQ)
+    n = jax.process_count()
+    idx = jax.process_index()
+    timeout_ms = int(
+        os.environ.get(ENV_GATHER_TIMEOUT_MS, DEFAULT_GATHER_TIMEOUT_MS)
+    )
+    prefix = f"repro/consensus/{seq}"
+    client.key_value_set(f"{prefix}/{idx}", json.dumps(payload, sort_keys=True))
+    out = []
+    for r in range(n):
+        try:
+            blob = client.blocking_key_value_get(f"{prefix}/{r}", timeout_ms)
+        except Exception as e:
+            raise PlanConsensusError(
+                f"rank {r} did not publish its consensus payload within "
+                f"{timeout_ms}ms (gather {seq}): {e}"
+            ) from e
+        out.append(json.loads(blob))
+    try:  # bound the KV store's growth over long tuning sessions
+        client.wait_at_barrier(f"{prefix}/done", timeout_ms)
+        if idx == 0:
+            client.key_value_delete(prefix)
+    except Exception:  # cleanup is best-effort; the gather already happened
+        pass
+    return out
+
+
+def _device_allgather(payload: dict) -> list[dict]:
+    """Legacy multi-process path: length-padded uint8 device all-gather via
+    ``multihost_utils`` (needs a backend with multiprocess computations —
+    TPU/GPU; kept for fleets whose coordination client is unavailable)."""
     import numpy as np
     from jax.experimental import multihost_utils
 
-    blob = _json.dumps(payload, sort_keys=True).encode()
+    blob = json.dumps(payload, sort_keys=True).encode()
     lens = multihost_utils.process_allgather(np.asarray([len(blob)], np.int32))
     buf = np.zeros((int(np.max(lens)) + 1,), np.uint8)
     buf[: len(blob)] = np.frombuffer(blob, np.uint8)
     bufs = multihost_utils.process_allgather(buf)
     return [
-        _json.loads(bytes(bufs[i, : int(lens[i, 0])]).decode())
+        json.loads(bytes(bufs[i, : int(lens[i, 0])]).decode())
         for i in range(bufs.shape[0])
     ]
+
+
+def default_gather(payload: dict) -> list[dict]:
+    """All-gather one JSON-able payload per process over the jax fleet.
+
+    Single-process: the identity (no collectives, no jax.distributed
+    requirement — the path every test and single-host run takes).
+    Multi-process: the coordination-service KV store carries the payloads
+    (``_kv_allgather`` — backend-independent, bounded timeouts), falling
+    back to the device all-gather only when no coordination client exists.
+    """
+    if jax.process_count() == 1:
+        return [payload]
+    client = _coordination_client()
+    if client is not None:
+        return _kv_allgather(payload, client)
+    return _device_allgather(payload)
 
 
 # -- phase 1: roles -------------------------------------------------------

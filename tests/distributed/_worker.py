@@ -1,0 +1,105 @@
+"""One rank of the live 2-process consensus fleet (run under pytest via
+``test_two_process.py`` — not a test module itself).
+
+Each rank joins a real ``jax.distributed`` fleet (CPU backend) and drives
+the actual ``repro.tuner.consensus`` code paths — ``default_gather`` over
+the coordination-service KV store, leader election, full ``fleet_agree``
+plan adoption with a measured plan built only on the leader, and the
+certify gate's divergence detection.  Results are written as JSON so the
+parent test can cross-check the two ranks byte for byte.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+import traceback
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--coordinator", required=True)
+    ap.add_argument("--rank", type=int, required=True)
+    ap.add_argument("--num", type=int, required=True)
+    ap.add_argument("--out", required=True)
+    args = ap.parse_args()
+
+    import jax
+
+    jax.distributed.initialize(
+        coordinator_address=args.coordinator,
+        num_processes=args.num,
+        process_id=args.rank,
+    )
+    assert jax.process_count() == args.num, jax.process_count()
+    assert jax.process_index() == args.rank, jax.process_index()
+
+    from repro.tuner import consensus
+
+    results: dict = {"rank": args.rank, "n": jax.process_count()}
+
+    # 1. raw payload all-gather over the real fleet (the primitive every
+    # consensus phase rides on) — NOT a simulated list-gather
+    gathered = consensus.default_gather(
+        {"rank": args.rank, "token": f"tok-{args.rank}"}
+    )
+    results["gather_tokens"] = sorted(p["token"] for p in gathered)
+    results["gather_ranks"] = sorted(int(p["rank"]) for p in gathered)
+
+    # 2. leader election over live device reports
+    roles = consensus.fleet_roles()
+    results["is_leader"] = roles.is_leader
+    results["leaders"] = list(map(list, roles.leaders))
+    results["fleet"] = list(map(list, roles.fleet))
+
+    # 3. full plan adoption: the leader measures a real (tiny) plan; the
+    # non-leader contributes None and must still adopt identical bytes
+    from repro.configs.registry import build_model, get_arch
+    from repro.core.clipping import discover_meta
+    from repro.data.synthetic import synthetic_arch_batch
+    from repro.tuner.measure import MeasureConfig, build_plan
+
+    cfg = get_arch("yi-6b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    probe = synthetic_arch_batch(cfg, batch=2, seq=16)
+    metas = discover_meta(model.loss_with_ctx, params, probe)
+    local_plan = None
+    if roles.is_leader:
+        local_plan = build_plan(
+            metas,
+            measure=MeasureConfig(repeats=1, warmup=0, max_rows=8),
+            arch=cfg.name,
+        )
+    adopted = consensus.fleet_agree(local_plan, metas)
+    results["plan_json"] = adopted.to_json()
+    results["plan_hash"] = adopted.consensus_hash()
+    results["agreed_ranks"] = adopted.agreed_ranks
+    results["leader_process"] = adopted.leader_process
+
+    # 4. certify gate: agreement passes, a rank-dependent value must raise
+    # PlanConsensusError on EVERY rank (all gathers stay sequence-aligned)
+    consensus.certify_fleet_value("uniform", "same-everywhere")
+    results["certify_uniform_ok"] = True
+    try:
+        consensus.certify_fleet_value("divergent", f"rank-{args.rank}")
+        results["divergence_detected"] = False
+    except consensus.PlanConsensusError as e:
+        results["divergence_detected"] = True
+        results["divergence_error"] = str(e)[:200]
+
+    pathlib.Path(args.out).write_text(json.dumps(results, sort_keys=True))
+    jax.distributed.shutdown()
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)

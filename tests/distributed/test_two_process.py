@@ -1,0 +1,102 @@
+"""Live 2-process ``jax.distributed`` consensus test.
+
+Launches two real OS processes that join one coordination service and run
+``repro.tuner.consensus`` end to end (see ``_worker.py``): the gather here
+is the production ``default_gather`` over the coordination-service KV
+store — no simulated list-gather anywhere.  CI runs this file as its own
+job (CPU backend, bounded timeout); a hung collective kills the fleet and
+fails the test instead of wedging the runner.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import socket
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+WORKER = pathlib.Path(__file__).with_name("_worker.py")
+N = 2
+TIMEOUT_S = 300
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _launch_fleet(tmp_path):
+    port = _free_port()
+    env = dict(
+        os.environ,
+        JAX_PLATFORMS="cpu",
+        XLA_FLAGS="--xla_force_host_platform_device_count=1",
+        PYTHONPATH=str(REPO / "src"),
+        REPRO_CONSENSUS_TIMEOUT_MS="120000",
+    )
+    outs = [tmp_path / f"rank{r}.json" for r in range(N)]
+    procs = [
+        subprocess.Popen(
+            [sys.executable, str(WORKER),
+             "--coordinator", f"127.0.0.1:{port}",
+             "--rank", str(r), "--num", str(N), "--out", str(outs[r])],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True,
+        )
+        for r in range(N)
+    ]
+    logs = []
+    try:
+        for p in procs:
+            out, _ = p.communicate(timeout=TIMEOUT_S)
+            logs.append(out)
+    except subprocess.TimeoutExpired:
+        for p in procs:
+            p.kill()
+        for p in procs:
+            out, _ = p.communicate()
+            logs.append(out)
+        pytest.fail(
+            "fleet hung past %ds:\n%s" % (TIMEOUT_S, "\n---\n".join(logs))
+        )
+    for r, p in enumerate(procs):
+        assert p.returncode == 0, (
+            f"rank {r} exited {p.returncode}:\n" + "\n---\n".join(logs)
+        )
+    return [json.loads(o.read_text()) for o in outs]
+
+
+def test_two_process_consensus_fleet(tmp_path):
+    r0, r1 = _launch_fleet(tmp_path)
+
+    # both ranks saw a real 2-process fleet
+    assert r0["n"] == N and r1["n"] == N
+
+    # the raw default_gather carried every rank's payload to every rank
+    for r in (r0, r1):
+        assert r["gather_tokens"] == ["tok-0", "tok-1"]
+        assert r["gather_ranks"] == [0, 1]
+
+    # leader election: rank 0 (lowest index of the one CPU device kind)
+    assert r0["is_leader"] is True
+    assert r1["is_leader"] is False
+    assert r0["leaders"] == r1["leaders"]
+    assert r0["fleet"] == r1["fleet"] and len(r0["fleet"]) == N
+
+    # plan adoption: only the leader measured, yet BOTH ranks hold the
+    # byte-identical fleet-agreed plan (the GSPMD correctness requirement)
+    assert r0["plan_json"] == r1["plan_json"]
+    assert r0["plan_hash"] == r1["plan_hash"]
+    assert r0["agreed_ranks"] == r1["agreed_ranks"] == N
+    assert r0["leader_process"] == r1["leader_process"] == 0
+
+    # certify gate: uniform values pass, a rank-dependent value raised
+    # PlanConsensusError on BOTH ranks (divergence may never pass silently)
+    for r in (r0, r1):
+        assert r["certify_uniform_ok"] is True
+        assert r["divergence_detected"] is True

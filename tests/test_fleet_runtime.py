@@ -1,0 +1,348 @@
+"""Elastic restart proven correct: fault injection, bit-exact resume,
+torn-write fallback, supervisor retry classification.
+
+The heavyweight tests drive the real CLI (``launch.train.main``) end to
+end: an uninterrupted run and a crash-injected/auto-restarted run must land
+on bit-identical final train state AND a bit-identical privacy spend —
+including across a fleet shrink, where ``runtime.elastic.elastic_plan``
+converts lost data-parallel shards into extra accumulation microsteps of
+the same per-shard microbatch (the invariant that makes the replay exact).
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, save_checkpoint
+from repro.runtime.elastic import ElasticPlan, current_data_shards, elastic_plan
+from repro.runtime.fault import PreemptionHandler, StepWatchdog
+from repro.runtime.inject import InjectedCrash, InjectionPlan
+
+ARCH = ["--arch", "yi-6b", "--reduced", "--seq", "16", "--log-every", "4"]
+
+
+def _run(tmp_path, name, extra):
+    from repro.launch.train import main
+
+    d = tmp_path / name
+    assert main(ARCH + ["--ckpt-dir", str(d)] + extra) == 0
+    return d
+
+
+def _final_state(d, step):
+    with np.load(d / f"step_{step}.npz") as z:
+        return {k: np.array(z[k]) for k in z.files}
+
+
+def _summary(d):
+    return json.loads((d / "summary.json").read_text())
+
+
+def _assert_bit_identical(a: dict, b: dict):
+    assert sorted(a) == sorted(b)
+    for k in a:
+        assert a[k].dtype == b[k].dtype, k
+        assert np.array_equal(a[k], b[k]), f"leaf {k} diverged"
+
+
+# -- elastic plan ----------------------------------------------------------
+def test_elastic_plan_preserves_logical_batch_across_shrink():
+    before = elastic_plan(logical_batch=64, data_shards=8, max_per_shard=8)
+    after = elastic_plan(logical_batch=64, data_shards=2, max_per_shard=8)
+    assert before.per_shard_batch * before.data_shards * before.accumulation_steps == 64
+    assert after.per_shard_batch * after.data_shards * after.accumulation_steps == 64
+    # the shrink grew accumulation, not the per-shard microbatch
+    assert after.accumulation_steps == 4 * before.accumulation_steps
+    assert after.per_shard_batch == before.per_shard_batch
+
+
+def test_elastic_plan_rejects_non_dividing_layouts():
+    with pytest.raises(ValueError, match="divide"):
+        elastic_plan(logical_batch=10, data_shards=3, max_per_shard=4)
+    with pytest.raises(ValueError, match="odd"):
+        elastic_plan(logical_batch=9, data_shards=1, max_per_shard=4)
+    with pytest.raises(ValueError):
+        elastic_plan(logical_batch=8, data_shards=0, max_per_shard=4)
+
+
+def test_elastic_execution_serializes_missing_parallelism():
+    plan = ElasticPlan(data_shards=4, per_shard_batch=2, accumulation_steps=3,
+                       note="")
+    # one process simulating the whole fleet: shards become microsteps
+    assert plan.execution(1) == (2, 12)
+    # one process per shard: the mesh takes the batch dim
+    assert plan.execution(4) == (8, 3)
+    # two processes, two serialized shards each
+    assert plan.execution(2) == (4, 6)
+    with pytest.raises(ValueError, match="divide"):
+        plan.execution(3)
+
+
+def test_current_data_shards_precedence(monkeypatch):
+    monkeypatch.delenv("REPRO_ELASTIC_SHARDS", raising=False)
+    assert current_data_shards(None) == 1
+    assert current_data_shards(4) == 4
+    monkeypatch.setenv("REPRO_ELASTIC_SHARDS", "2")
+    assert current_data_shards(None) == 2
+    assert current_data_shards(8) == 8  # explicit CLI wins over env
+
+
+# -- fault injection -------------------------------------------------------
+def test_injection_spec_parsing_and_one_shot(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULT_INJECT", raising=False)
+    plan = InjectionPlan.from_spec("crash@3,slow@1:0.01")
+    plan.on_step(0)
+    plan.on_step(1)  # slow fires (sleeps 10ms), no raise
+    with pytest.raises(InjectedCrash):
+        plan.on_step(3)
+    plan.on_step(3)  # one-shot: the same step does not re-fire
+    assert all(i.fired for i in plan.injectors if i.step in (1, 3))
+
+
+def test_injection_env_merges_with_cli(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULT_INJECT", "torn@7")
+    plan = InjectionPlan.from_spec("crash@2")
+    assert sorted(i.kind for i in plan.injectors) == ["crash", "torn"]
+
+
+@pytest.mark.parametrize("spec", ["crash5", "warp@3", "slow@3", "shrink@3",
+                                  "shrink@3:0"])
+def test_injection_rejects_bad_specs(spec, monkeypatch):
+    monkeypatch.delenv("REPRO_FAULT_INJECT", raising=False)
+    with pytest.raises(ValueError):
+        InjectionPlan.from_spec(spec)
+
+
+def test_torn_injector_truncates_checkpoint(tmp_path):
+    plan = InjectionPlan.from_spec("torn@2", env="")
+    p = save_checkpoint(tmp_path, 2, {"a": np.arange(100.0)})
+    full = p.stat().st_size
+    plan.on_checkpoint_saved(2, p)
+    assert 0 < p.stat().st_size < full
+
+
+# -- supervisor retry classification ---------------------------------------
+def test_retry_classification():
+    from repro.launch.train import is_retryable_failure
+    from repro.tuner.consensus import PlanConsensusError
+
+    assert is_retryable_failure(InjectedCrash("boom"))
+    assert is_retryable_failure(RuntimeError("transient"))
+    assert is_retryable_failure(OSError("storage blip"))
+    assert not is_retryable_failure(ValueError("bad config"))
+    assert not is_retryable_failure(AssertionError("invariant"))
+    assert not is_retryable_failure(PlanConsensusError("fleet divergence"))
+
+
+def test_auto_restart_does_not_burn_attempts_on_config_error(tmp_path, monkeypatch):
+    """A deterministic config error (non-dividing elastic layout) must fail
+    immediately instead of looping through the whole restart budget."""
+    import repro.launch.train as train
+
+    calls = []
+    orig = train.run_once
+
+    def counting(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(train, "run_once", counting)
+    argv = ARCH + [
+        "--steps", "4", "--batch", "4", "--data-shards", "3",
+        "--auto-restart", "5", "--ckpt-dir", str(tmp_path / "cfg"),
+    ]
+    with pytest.raises(ValueError, match="divide"):
+        train.main(argv)
+    assert len(calls) == 1  # zero restart attempts were consumed
+
+
+# -- watchdog / preemption units -------------------------------------------
+def test_watchdog_trip_accounting(monkeypatch):
+    import repro.runtime.fault as fault
+
+    clock = {"t": 0.0}
+    monkeypatch.setattr(fault.time, "monotonic", lambda: clock["t"])
+    trips = []
+    wd = StepWatchdog(trip_factor=3.0,
+                      on_trip=lambda s, dt, med: trips.append((s, dt, med)))
+
+    def step(i, dt):
+        wd.start_step()
+        clock["t"] += dt
+        return wd.end_step(i)
+
+    for i in range(10):  # below the 10-sample warmup: never trips
+        step(i, 1.0)
+    assert wd.trips == 0
+    step(10, 10.0)  # 10x the median
+    assert wd.trips == 1 and trips == [(10, 10.0, 1.0)]
+    step(11, 1.0)  # back to normal
+    assert wd.trips == 1
+    # the slow sample joined the window but the median is robust to it
+    step(12, 4.0)
+    assert wd.trips == 2
+
+
+def test_preemption_handler_flag_and_uninstall():
+    prev = signal.getsignal(signal.SIGTERM)
+    h = PreemptionHandler().install()
+    try:
+        assert not h.preempted()
+        h.request_stop()
+        assert h.preempted()
+        assert signal.getsignal(signal.SIGTERM) != prev
+    finally:
+        h.uninstall()
+    assert signal.getsignal(signal.SIGTERM) == prev
+
+
+def test_preemption_install_from_worker_thread_is_noop():
+    holder = {}
+
+    def worker():
+        holder["h"] = PreemptionHandler().install()
+
+    t = threading.Thread(target=worker)
+    t.start()
+    t.join()
+    h = holder["h"]
+    assert not h.preempted()
+    h.request_stop()
+    assert h.preempted()
+    h.uninstall()  # no signals were installed; must not raise
+
+
+# -- checkpoint manager hardening ------------------------------------------
+def test_manager_skips_stray_files_and_rotates(tmp_path):
+    mgr = CheckpointManager(tmp_path, save_every=1, keep=2, async_save=False)
+    for s in (1, 2, 3):
+        mgr.save(s, {"x": np.full((4,), float(s))})
+    # stray droppings rotation/scan must skip, not crash on
+    (tmp_path / ".tmp_step_9.npz").write_bytes(b"partial")
+    (tmp_path / "step_3.npz.bak").write_bytes(b"junk")
+    (tmp_path / "notes.txt").write_text("hi")
+    (tmp_path / "subdir").mkdir()
+    assert mgr.latest() == 3
+    assert latest_step(tmp_path) == 3
+    assert mgr.available_steps() == [2, 3]  # keep=2 rotated step 1 out
+    mgr.save(4, {"x": np.full((4,), 4.0)})
+    assert mgr.available_steps() == [3, 4]
+    step, state = mgr.restore()
+    assert step == 4 and float(state["x"][0]) == 4.0
+
+
+def test_restore_falls_back_past_torn_newest_checkpoint(tmp_path):
+    mgr = CheckpointManager(tmp_path, save_every=1, keep=3, async_save=False)
+    for s in (1, 2, 3):
+        mgr.save(s, {"x": np.full((8,), float(s))})
+    # tear the newest artifact (truncate), corrupt the one before it
+    p3 = tmp_path / "step_3.npz"
+    p3.write_bytes(p3.read_bytes()[:40])
+    (tmp_path / "step_2.npz").write_bytes(b"\x00garbage\x00" * 8)
+    step, state = mgr.restore()
+    assert step == 1 and float(state["x"][0]) == 1.0
+    # an explicitly requested damaged step still raises (caller asserted it)
+    with pytest.raises(Exception):
+        mgr.restore(step=3)
+
+
+def test_restore_raises_when_nothing_readable(tmp_path):
+    mgr = CheckpointManager(tmp_path, save_every=1, async_save=False)
+    mgr.save(1, {"x": np.zeros(2)})
+    (tmp_path / "step_1.npz").write_bytes(b"nope")
+    with pytest.raises(FileNotFoundError, match="no readable"):
+        mgr.restore()
+
+
+def test_manager_on_saved_fires_on_async_writer_thread(tmp_path):
+    seen = []
+    mgr = CheckpointManager(
+        tmp_path, save_every=1, async_save=True,
+        on_saved=lambda step, path: seen.append(
+            (step, path.name, threading.current_thread().name)
+        ),
+    )
+    mgr.save(1, {"x": np.zeros(3)})
+    mgr.wait()
+    assert seen and seen[0][:2] == (1, "step_1.npz")
+    assert seen[0][2] != threading.main_thread().name
+
+
+# -- bit-exact resume (CLI end to end) -------------------------------------
+@pytest.mark.parametrize("policy", ["fixed", "automatic", "quantile"])
+def test_bitexact_resume_after_crash(tmp_path, policy):
+    """2N straight vs crash-at-N + auto-restart: final params, optimizer
+    state, policy state, and the accountant's epsilon must be identical."""
+    base = ["--steps", "6", "--batch", "2", "--ckpt-every", "2",
+            "--clip-policy", policy]
+    a = _run(tmp_path, "straight", base)
+    b = _run(tmp_path, "restart",
+             base + ["--fail-at-step", "4", "--auto-restart", "2"])
+    _assert_bit_identical(_final_state(a, 6), _final_state(b, 6))
+    assert _summary(a)["epsilon"] == _summary(b)["epsilon"]
+    assert _summary(a)["delta"] == _summary(b)["delta"]
+
+
+def test_bitexact_resume_with_fleet_shrink(tmp_path, monkeypatch):
+    """THE elastic acceptance path: a crash that also shrinks the fleet
+    (2 data shards -> 1) resumes via elastic_plan with the same logical
+    batch and a larger accumulation — final state and epsilon bit-identical
+    to the uninterrupted 2-shard run."""
+    monkeypatch.delenv("REPRO_ELASTIC_SHARDS", raising=False)
+    base = ["--steps", "6", "--batch", "4", "--ckpt-every", "2",
+            "--elastic-max-per-shard", "2", "--clip-policy", "quantile"]
+    monkeypatch.setenv("REPRO_ELASTIC_SHARDS", "2")
+    a = _run(tmp_path, "fleet2", base)
+    assert _summary(a)["data_shards"] == 2
+    assert _summary(a)["accumulation_steps"] == 2  # 2 serialized shards
+
+    monkeypatch.setenv("REPRO_ELASTIC_SHARDS", "2")
+    try:
+        b = _run(tmp_path, "shrunk",
+                 base + ["--inject", "shrink@4:1", "--auto-restart", "2"])
+    finally:
+        os.environ.pop("REPRO_ELASTIC_SHARDS", None)
+    s = _summary(b)
+    # the restart REPLANNED: one shard, same logical batch, deeper accum
+    assert s["data_shards"] == 1
+    assert s["logical_batch"] == 4
+    assert s["microbatch"] == 2 and s["accumulation_steps"] == 2
+    _assert_bit_identical(_final_state(a, 6), _final_state(b, 6))
+    assert _summary(a)["epsilon"] == s["epsilon"]
+
+
+def test_torn_checkpoint_recovery_end_to_end(tmp_path):
+    """Crash at N with the crash-time checkpoint torn: restore falls back to
+    the previous rotated step and the rerun still reaches the bit-identical
+    final state (recomputation is deterministic)."""
+    base = ["--steps", "6", "--batch", "2", "--ckpt-every", "2"]
+    a = _run(tmp_path, "straight", base)
+    b = _run(tmp_path, "torn",
+             base + ["--inject", "crash@4,torn@4", "--auto-restart", "2"])
+    _assert_bit_identical(_final_state(a, 6), _final_state(b, 6))
+    assert _summary(a)["epsilon"] == _summary(b)["epsilon"]
+
+
+def test_sigterm_preemption_checkpoints_and_exits_zero(tmp_path):
+    """The preemption path: SIGTERM -> flag -> checkpoint -> exit 0, then a
+    later --resume completes the run."""
+    d = tmp_path / "preempt"
+    argv = ARCH + ["--steps", "20", "--batch", "2", "--ckpt-dir", str(d),
+                   "--ckpt-every", "50", "--inject", "sigterm@2"]
+    from repro.launch.train import main
+
+    prev_disposition = signal.getsignal(signal.SIGTERM)
+    assert main(argv) == 0
+    preempted_at = latest_step(d)
+    assert preempted_at is not None and preempted_at < 20
+    # the SIGTERM disposition the run replaced is restored on the way out
+    assert signal.getsignal(signal.SIGTERM) == prev_disposition
+    argv = ARCH + ["--steps", "5", "--batch", "2", "--ckpt-dir", str(d),
+                   "--resume"]
+    assert main(argv) == 0
+    assert latest_step(d) == 5
