@@ -19,6 +19,12 @@ buried in CI artifact retention.
 current artifacts render to — the CI guard against archiving new artifacts
 without regenerating.
 
+``--obs-run DIR`` prints the latest training run's *observed* step-time
+percentiles (from ``DIR/metrics.jsonl``, the repro.obs stream) alongside
+the newest archived bench medians — observed wall times vs the isolated
+bench numbers, on stdout only; the written dashboard never changes, so
+``--check`` stays stable across obs runs.
+
 ``--check-step-time PCT`` is the step-time floor gate: for every metric it
 compares the newest archived row against the most recent OLDER row from the
 same host class (rows carry a ``host`` fingerprint stamped by
@@ -210,6 +216,59 @@ def check_step_time(
     return 1
 
 
+def _read_jsonl(path: Path) -> list[dict]:
+    """Torn-tolerant JSONL reader (local copy: this script runs stdlib-only,
+    without PYTHONPATH=src, in the docs CI job)."""
+    if not path.exists():
+        return []
+    out = []
+    for line in path.read_text(errors="replace").splitlines():
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if isinstance(rec, dict):
+            out.append(rec)
+    return out
+
+
+def _pctile(xs: list[float], q: float) -> float:
+    s = sorted(xs)
+    return s[min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))]
+
+
+def report_obs_run(run_dir: Path,
+                   history: dict[str, dict[str, list[dict]]],
+                   full_order: dict[str, int]) -> int:
+    """Print the run's observed step-time percentiles next to the newest
+    archived bench medians (stdout only — the dashboard file is untouched)."""
+    train = [
+        m for m in _read_jsonl(run_dir / "metrics.jsonl")
+        if m.get("kind") == "train_step" and m.get("step_s")
+    ]
+    if not train:
+        print(f"obs run {run_dir}: no train_step records", file=sys.stderr)
+        return 1
+    times = [float(m["step_s"]) for m in train]
+    print(f"observed ({run_dir}, {len(times)} steps): "
+          f"p50 {_pctile(times, 0.5) * 1e3:.1f}ms "
+          f"p95 {_pctile(times, 0.95) * 1e3:.1f}ms")
+    for bench in ("modes", "policies"):
+        per_sha = history.get(bench, {})
+        if not per_sha:
+            continue
+        newest = _order_shas(list(per_sha), full_order)[-1]
+        cells = [
+            f"{r['name']} {float(r['us_per_call']) / 1e3:.1f}ms"
+            for r in per_sha[newest]
+            if float(r.get("us_per_call", 0.0)) > 0.0
+        ]
+        if cells:
+            print(f"bench medians (BENCH_{bench} @ {newest}): "
+                  + ", ".join(cells))
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--history-dir", default=str(REPO / "benchmarks" / "history"))
@@ -223,6 +282,10 @@ def main(argv=None) -> int:
                     help="exit 1 when the newest same-host row regressed "
                          "any step time by more than PCT percent "
                          f"(waive with {WAIVER_ENV}=<reason>)")
+    ap.add_argument("--obs-run", default=None, metavar="DIR",
+                    help="print DIR's observed step-time percentiles "
+                         "(repro.obs metrics.jsonl) alongside the newest "
+                         "bench medians; the dashboard file is not written")
     args = ap.parse_args(argv)
 
     history_dir = Path(args.history_dir)
@@ -230,6 +293,9 @@ def main(argv=None) -> int:
     history = load_history(history_dir)
     order = git_sha_order(REPO)
     text = render(history, order) + "\n"
+
+    if args.obs_run is not None:
+        return report_obs_run(Path(args.obs_run), history, order)
 
     if args.check_step_time is not None:
         return check_step_time(

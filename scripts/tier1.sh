@@ -30,6 +30,15 @@ python -m benchmarks.run --fast --only table1,table3,kernels,modes,policies,deco
 python scripts/check_docs_links.py
 python scripts/policy_smoke.py
 
+# observability smoke: a short instrumented run must leave a readable
+# events/metrics stream with a non-empty epsilon trajectory, and the
+# dashboard must surface the observed step-time percentiles
+OBS_DIR="${OBS_DIR:-$(mktemp -d)}"
+python -m repro.launch.train --arch yi-6b --reduced --seq 16 --steps 3 \
+  --batch 2 --log-every 1 --obs-dir "$OBS_DIR"
+python -m repro.obs "$OBS_DIR" --require-epsilon
+python scripts/bench_dashboard.py --obs-run "$OBS_DIR"
+
 # accumulate the perf trajectory in-repo (SHA-stamped; commit with the PR)
 sha="$(git rev-parse --short HEAD 2>/dev/null || echo nogit)"
 mkdir -p benchmarks/history

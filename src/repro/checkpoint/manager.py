@@ -25,6 +25,7 @@ from typing import Any, Callable, Optional
 import jax
 
 from repro.checkpoint.checkpointer import latest_step, restore_checkpoint, save_checkpoint
+from repro.obs.events import emit_event
 from repro.utils.logging import get_logger
 
 log = get_logger("ckpt-manager")
@@ -90,6 +91,11 @@ class CheckpointManager:
             self._rotate()
         if self.on_saved is not None:
             self.on_saved(step, path)
+        # after on_saved: a torn/corrupt injector has already mangled the
+        # artifact, so the event describes what is actually on disk.  The
+        # JSONL sink is lock-serialized — this may run on the writer thread.
+        emit_event("checkpoint_saved", step=step, path=str(path),
+                   async_save=self.async_save)
 
     def wait(self) -> None:
         if self._pending is not None:
@@ -136,11 +142,18 @@ class CheckpointManager:
         """
         with self._io_lock:
             if step is not None:
-                return restore_checkpoint(self.dir, step, shardings=shardings)
+                out = restore_checkpoint(self.dir, step, shardings=shardings)
+                emit_event("checkpoint_restored", step=step,
+                           directory=str(self.dir))
+                return out
             candidates = self._steps_on_disk()
             for s in reversed(candidates):
                 try:
-                    return restore_checkpoint(self.dir, s, shardings=shardings)
+                    out = restore_checkpoint(self.dir, s, shardings=shardings)
+                    emit_event("checkpoint_restored", step=s,
+                               directory=str(self.dir),
+                               fell_back=s != candidates[-1])
+                    return out
                 except CORRUPT_CHECKPOINT_ERRORS as e:
                     log.warning(
                         "checkpoint step=%d unreadable (%s: %s); falling back "

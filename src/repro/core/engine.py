@@ -330,6 +330,40 @@ class PrivacyEngine:
         self.use_plan(plan)
         return plan
 
+    def plan_event_fields(self) -> dict:
+        """The ``plan_adopted`` event payload for this engine's clipping.
+
+        Everything the post-mortem reader needs to reconstruct what was
+        actually traced: the per-tap branch decision for the running mode,
+        the kernel winners per (tap, op), and the batch certificate.  With
+        no plan adopted the decision is the analytic rule — reported as
+        such so "no tuning happened" is an explicit record, not a missing
+        one.  Plain JSON-able scalars/dicts only.
+        """
+        out = {
+            "mode": self.mode,
+            "policy": self.clip_policy.fingerprint(),
+            "clip_norm": float(self.max_grad_norm),
+            "noise_multiplier": float(self.noise_multiplier),
+        }
+        plan = self.plan
+        if plan is None:
+            out["source"] = "analytic"
+            return out
+        out.update(
+            source="plan",
+            branches=plan.branch_map(self.mode),
+            kernels=plan.kernel_map(),
+            recommended_mode=plan.recommended_mode(),
+            physical_batch=plan.physical_batch,
+            accumulation_steps=plan.accumulation_steps,
+            plan_device=plan.device,
+            consensus_hash=plan.consensus_hash(),
+            agreed_hash=plan.agreed_hash,
+            agreed_ranks=plan.agreed_ranks,
+        )
+        return out
+
     # -- validation -------------------------------------------------------
     def validate(self, params: Any, batch: Any) -> None:
         """Raise if any trainable parameter escapes per-sample clipping."""

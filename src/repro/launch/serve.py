@@ -20,8 +20,9 @@ import jax.numpy as jnp
 
 from repro.configs.registry import build_model, get_arch
 from repro.launch.steps import make_decode_step
+from repro.obs import events as obs
 from repro.serving import Engine, aggregate_metrics
-from repro.utils.logging import get_logger
+from repro.utils.logging import get_logger, reconfigure
 
 log = get_logger("serve")
 
@@ -116,8 +117,19 @@ def main(argv=None) -> int:
     ap.add_argument("--page", type=int, default=16)
     ap.add_argument("--eos", type=int, default=0)
     ap.add_argument("--slo-ttft-ms", type=float, default=None)
+    ap.add_argument("--obs-dir", default=None,
+                    help="directory for the observability streams "
+                         "(events.jsonl/metrics.jsonl); request_shed events "
+                         "and per-step queue stats land here")
     args = ap.parse_args(argv)
+    reconfigure()
 
+    obs.configure_run(args.obs_dir)
+    obs.emit_event(
+        "run_started", arch=args.arch, reduced=bool(args.reduced),
+        slots=args.slots, requests=args.requests, max_new=args.max_new,
+        slo_ttft_ms=args.slo_ttft_ms,
+    )
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -125,8 +137,11 @@ def main(argv=None) -> int:
     params = model.init(jax.random.PRNGKey(0))
 
     if cfg.family == "audio" or cfg.prefix_tokens:
-        return _serve_wave(model, cfg, params, args)
-    return _serve_engine(model, cfg, params, args)
+        rc = _serve_wave(model, cfg, params, args)
+    else:
+        rc = _serve_engine(model, cfg, params, args)
+    obs.emit_event("run_finished", exit_code=rc)
+    return rc
 
 
 if __name__ == "__main__":

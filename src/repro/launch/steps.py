@@ -131,6 +131,8 @@ def make_train_step(
             "loss": loss,
             "lr": lr,
             "grad_norm_mean": jnp.mean(aux["per_sample_norms"]),
+            "norm_mean": jnp.mean(aux["per_sample_norms"]),
+            "norm_max": jnp.max(aux["per_sample_norms"]),
             "clip_frac": jnp.mean((aux["clip_factors"] < 1.0).astype(jnp.float32)),
             # the policy's current sensitivity bound (== R for fixed/quantile)
             "clip_norm": policy.sensitivity(pstate) * jnp.ones(()),
@@ -237,6 +239,10 @@ def make_accum_finalize(
             "loss": acc["loss"] / dp.accumulation_steps,
             "lr": schedule(state["step"]),
             "clip_frac": acc["clip_hits"] / n_samples,
+            # whole-logical-batch norm summary from the scattered buffers —
+            # computed on device, synced only at the logical-batch boundary
+            "norm_mean": jnp.mean(acc["norms"]),
+            "norm_max": jnp.max(acc["norms"]),
         }
         new_state = base(state, acc["grads"], acc["norms"], acc["mask"])
         return new_state, metrics

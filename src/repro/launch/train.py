@@ -56,13 +56,15 @@ from repro.launch.steps import (
     make_train_state,
     make_train_step,
 )
+from repro.obs import events as obs
+from repro.obs.profile import ProfileWindow
 from repro.optim import adam, warmup_cosine
 from repro.parallel.reshard import use_reshard_rules
 from repro.parallel.sharding import batch_shardings, state_shardings
 from repro.runtime.elastic import current_data_shards, elastic_plan
 from repro.runtime.fault import PreemptionHandler, StepWatchdog
 from repro.runtime.inject import InjectionPlan
-from repro.utils.logging import get_logger
+from repro.utils.logging import get_logger, reconfigure
 
 log = get_logger("train")
 
@@ -123,6 +125,14 @@ def parse_args(argv=None):
                     help="per-shard microbatch cap for the elastic replan "
                          "(0 = the tuned/physical microbatch)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--obs-dir", default=None,
+                    help="directory for the observability streams "
+                         "(events.jsonl/metrics.jsonl; default: --ckpt-dir). "
+                         "Read back with `python -m repro.obs DIR`")
+    ap.add_argument("--profile-steps", default=None, metavar="N[:M]",
+                    help="capture a jax.profiler trace around the inclusive "
+                         "step window [N, M] into <obs-dir>/profile "
+                         "(repro.obs.timeline extracts per-step wall times)")
     ap.add_argument("--tune", action="store_true",
                     help="profile ghost-vs-instantiate per tap and search the "
                          "max physical microbatch before training")
@@ -163,6 +173,25 @@ def _write_summary(ckpt_dir: str, **fields) -> None:
 def run_once(args, injection: Optional[InjectionPlan] = None) -> int:
     if injection is None:
         injection = _injection_for(args)
+    # observability streams live next to the checkpoints unless redirected;
+    # configure_run(None) resets any sinks a previous in-process run left
+    # installed, and re-configuring the SAME dir keeps appending (so every
+    # --auto-restart attempt lands in one events.jsonl timeline)
+    run_dir = args.obs_dir or args.ckpt_dir
+    obs.configure_run(run_dir)
+    obs.emit_event(
+        "run_started", arch=args.arch, reduced=bool(args.reduced),
+        steps=args.steps, logical_batch=args.batch, seq_len=args.seq,
+        mode=args.mode, policy=args.clip_policy, resume=bool(args.resume),
+        ckpt_dir=args.ckpt_dir,
+    )
+    profile = None
+    if args.profile_steps:
+        if run_dir is None:
+            log.warning("--profile-steps needs --obs-dir or --ckpt-dir for "
+                        "the trace output; skipping profiling")
+        else:
+            profile = ProfileWindow.from_spec(args.profile_steps, run_dir)
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -406,6 +435,17 @@ def run_once(args, injection: Optional[InjectionPlan] = None) -> int:
             f"{plan.consensus_hash() if plan is not None else '-'}",
         )
 
+    # the adopted configuration, as actually traced: per-tap branch map +
+    # kernel winners from the plan (or the analytic rule), plus the executed
+    # batch layout (which elastic resharding may have reshaped past the
+    # plan's own certificate)
+    plan_fields = engine.plan_event_fields()
+    plan_fields.update(
+        mode=clip_mode, physical_batch=physical, accumulation_steps=accum,
+        logical_batch=logical_eff, data_shards=data_shards,
+    )
+    obs.emit_event("plan_adopted", **plan_fields)
+
     dp = DPTrainConfig(
         clipping_mode=clip_mode,
         clip_norm=args.clip_norm,
@@ -524,11 +564,15 @@ def run_once(args, injection: Optional[InjectionPlan] = None) -> int:
                 step_idx, batch = pipeline.next()
                 watchdog.start_step()
                 injection.on_step(step_idx)
+                if profile is not None:
+                    profile.before_step(step_idx)
                 state, metrics = jit_step(state, batch)
             else:
                 watchdog.start_step()
                 step_idx = step
                 injection.on_step(step_idx)
+                if profile is not None:
+                    profile.before_step(step_idx)
                 # every microstep is async dispatch into the donated
                 # accumulator; nothing on the host reads a device value, so
                 # the bank reductions of microstep i overlap the dispatch
@@ -541,11 +585,36 @@ def run_once(args, injection: Optional[InjectionPlan] = None) -> int:
                     )
                 state, metrics = fin_fn(state, acc)
                 # the ONE host sync per logical batch: bounds the dispatch
-                # queue and makes the watchdog time executed work
-                jax.block_until_ready(state["step"])
+                # queue and makes the watchdog time executed work.  The step
+                # metrics ride the SAME sync, so the record below reads
+                # already-materialized buffers — instrumentation adds no
+                # second block_until_ready (test-asserted)
+                jax.block_until_ready((state["step"], metrics))
             engine.record_step()
             dt = watchdog.end_step(step_idx)
             step = step_idx + 1
+            if profile is not None:
+                profile.after_step(step_idx)
+            if obs.metrics_active():
+                eps_m, delta_m = engine.privacy_spent()
+                obs.emit_metrics(
+                    {
+                        "kind": "train_step",
+                        "loss": float(metrics["loss"]),
+                        "lr": float(metrics["lr"]),
+                        "clip_frac": float(metrics["clip_frac"]),
+                        "norm_mean": float(metrics["norm_mean"]),
+                        "norm_max": float(metrics["norm_max"]),
+                        "epsilon": eps_m,
+                        "delta": delta_m,
+                        "step_s": dt,
+                        "examples_per_s": logical_eff / dt if dt > 0 else None,
+                        "physical_batch": physical,
+                        "accumulation_steps": accum,
+                        "mode": clip_mode,
+                    },
+                    step=step,
+                )
             if step % args.log_every == 0 or step == args.steps:
                 eps, delta = engine.privacy_spent()
                 log.info(
@@ -558,16 +627,20 @@ def run_once(args, injection: Optional[InjectionPlan] = None) -> int:
                     manager.save(step, state, force=True)
                     manager.wait()
                     log.warning("preempted: checkpointed step %d, exiting", step)
+                    obs.emit_event("preemption", step=step, checkpointed=True)
                     return 0
                 manager.save(step, state)
     finally:
         pipeline.stop()
         preempt.uninstall()
+        if profile is not None:
+            profile.stop(step=step)
         if manager is not None:
             manager.save(step, state, force=True)
             manager.wait()
     eps, delta = engine.privacy_spent()
     log.info("done: %d steps, privacy spent (eps=%.3f, delta=%.1e)", step, eps, delta)
+    obs.emit_event("run_finished", step=step, epsilon=eps, delta=delta)
     if args.ckpt_dir:
         _write_summary(
             args.ckpt_dir, step=step, epsilon=eps, delta=delta,
@@ -609,6 +682,7 @@ def is_retryable_failure(exc: BaseException) -> bool:
 
 def main(argv=None) -> int:
     args = parse_args(argv)
+    reconfigure()  # re-apply $REPRO_LOG_LEVEL to module-level loggers
     # ONE injection plan for the whole supervision loop: injectors are
     # one-shot, so a crash that already fired does not re-fire after the
     # in-process restart (no args surgery needed)
@@ -634,6 +708,13 @@ def main(argv=None) -> int:
                 raise
             log.warning("run failed (%s); auto-restart %d/%d from latest checkpoint",
                         e, attempts, args.auto_restart)
+            # the crashed attempt's sinks are still installed (configure_run
+            # keeps them for the same dir), so this lands in the same stream
+            obs.emit_event(
+                "restart_attempt", attempt=attempts,
+                max_attempts=args.auto_restart,
+                error=f"{type(e).__name__}: {e}",
+            )
             # an actual copy: the previous `dataclasses.replace(args) if
             # is_dataclass(args) else args` was a no-op on an
             # argparse.Namespace, silently mutating the caller's args

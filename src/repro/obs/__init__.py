@@ -1,0 +1,58 @@
+"""repro.obs — low-overhead observability: metrics stream, lifecycle
+events, profiler trace capture.
+
+Three pieces (see docs/ARCHITECTURE.md "Observability"):
+
+* ``sinks`` — the ``MetricsSink`` protocol (JSONL-file / in-memory / null)
+  plus the process-wide stream registry.  The default sink is inert, so
+  instrumented library code costs nothing until a driver calls
+  ``configure_run(run_dir)``.
+* ``events`` — the closed lifecycle-event taxonomy (``EVENT_KINDS``) and
+  the ``emit_event``/``emit_metrics`` stamping layer (run_id/rank/seq).
+* ``profile``/``timeline`` — ``--profile-steps N:M`` trace capture and the
+  stdlib-only extraction of per-step wall times from the written trace.
+
+``python -m repro.obs RUN_DIR`` renders a run's streams into a summary.
+"""
+from repro.obs.events import (
+    EVENT_KINDS,
+    configure_run,
+    emit_event,
+    emit_metrics,
+    events_active,
+    flush_all,
+    metrics_active,
+)
+from repro.obs.profile import ProfileWindow
+from repro.obs.report import render_text, summarize_run
+from repro.obs.sinks import (
+    JsonlSink,
+    MemorySink,
+    MetricsSink,
+    NullSink,
+    get_sink,
+    read_jsonl,
+    reset_sinks,
+    set_sink,
+)
+
+__all__ = [
+    "EVENT_KINDS",
+    "JsonlSink",
+    "MemorySink",
+    "MetricsSink",
+    "NullSink",
+    "ProfileWindow",
+    "configure_run",
+    "emit_event",
+    "emit_metrics",
+    "events_active",
+    "flush_all",
+    "get_sink",
+    "metrics_active",
+    "read_jsonl",
+    "render_text",
+    "reset_sinks",
+    "set_sink",
+    "summarize_run",
+]

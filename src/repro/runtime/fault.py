@@ -15,6 +15,7 @@ import threading
 import time
 from typing import Callable, Optional
 
+from repro.obs.events import emit_event
 from repro.utils.logging import get_logger
 
 log = get_logger("fault")
@@ -49,6 +50,8 @@ class StepWatchdog:
                     "straggler tripwire: step %d took %.3fs (median %.3fs)",
                     step, dt, med,
                 )
+                emit_event("watchdog_trip", step=step, dt_s=dt, median_s=med,
+                           trip_factor=self.trip_factor, trips=self.trips)
                 if self.on_trip:
                     self.on_trip(step, dt, med)
         self.times.append(dt)

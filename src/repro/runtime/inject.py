@@ -34,6 +34,7 @@ import signal
 import time
 from typing import Optional
 
+from repro.obs.events import emit_event
 from repro.utils.logging import get_logger
 
 log = get_logger("inject")
@@ -118,6 +119,8 @@ class InjectionPlan:
                 continue
             inj.fired = True
             log.warning("fault injection: %s firing at step %d", inj.spec(), step)
+            emit_event("fault_injected", step=step, spec=inj.spec(),
+                       fault_kind=inj.kind)
             if inj.kind == "crash":
                 raise InjectedCrash(f"injected fault at step {step}")
             if inj.kind == "shrink":
@@ -146,9 +149,23 @@ class InjectionPlan:
             log.warning(
                 "fault injection: %s mangling checkpoint %s", inj.spec(), path
             )
+            emit_event("fault_injected", step=step, spec=inj.spec(),
+                       fault_kind=inj.kind, path=str(path))
             if inj.kind == "torn":
-                # keep a prefix: a torn write, not a missing file
-                data = path.read_bytes()
-                path.write_bytes(data[: max(1, len(data) // 3)])
+                tear_file(path)
             else:  # corrupt
                 path.write_bytes(b"\x00garbage\x00" * 16)
+
+
+def tear_file(path) -> None:
+    """Truncate ``path`` to a strict prefix — a realistic torn write.
+
+    Shared between the ``torn@S`` checkpoint injector and the obs tests
+    that prove ``sinks.read_jsonl`` survives a crash-torn final line: both
+    need "a prefix of the true bytes", not a missing or zeroed file.
+    """
+    import pathlib
+
+    path = pathlib.Path(path)
+    data = path.read_bytes()
+    path.write_bytes(data[: max(1, len(data) // 3)])

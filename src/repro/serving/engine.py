@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.steps import make_decode_step
+from repro.obs.events import emit_metrics, metrics_active
 from repro.serving.kv_pages import (
     PageAllocator,
     extract_kv,
@@ -231,6 +232,20 @@ class Engine:
         if self.scheduler.active_slots():
             emitted.extend(self._decode_once())
         self.steps += 1
+        if metrics_active():
+            emit_metrics(
+                dict(
+                    kind="serving_step",
+                    active_slots=len(self.scheduler.active_slots()),
+                    free_slots=len(self.scheduler.free_slots()),
+                    emitted=len(emitted),
+                    **self.queue.stats(
+                        free_slots=len(self.scheduler.free_slots()),
+                        active_remaining=self.scheduler.active_remaining(),
+                    ),
+                ),
+                step=self.steps,
+            )
         return emitted
 
     def drain(self, max_steps: Optional[int] = None) -> dict[int, Completion]:

@@ -26,6 +26,8 @@ import dataclasses
 from collections import deque
 from typing import Optional
 
+from repro.obs.events import emit_event
+
 
 @dataclasses.dataclass
 class Request:
@@ -135,9 +137,38 @@ class RequestQueue:
             )
             if projected * 1e3 > req.slo_ttft_ms:
                 self.shed.append(req)
+                emit_event(
+                    "request_shed", rid=req.rid, prompt_len=req.prompt_len,
+                    slo_ttft_ms=req.slo_ttft_ms,
+                    projected_ttft_ms=projected * 1e3,
+                    queue_depth=len(self._pending), free_slots=free_slots,
+                )
                 return False
         self._pending.append(req)
         return True
+
+    def stats(
+        self, free_slots: int = 0, active_remaining: Optional[list[int]] = None
+    ) -> dict:
+        """Snapshot of the admission state: depth, sheds, latency EMAs.
+
+        ``free_slots``/``active_remaining`` (the engine's current occupancy)
+        extend the snapshot with the projected TTFT a request arriving at
+        the back of the queue would see — the number admission actually
+        compares against SLOs.  All values are host floats; callers may
+        JSON-serialize the dict as-is.
+        """
+        out = {
+            "queue_depth": len(self._pending),
+            "shed_total": len(self.shed),
+            "prefill_s_per_token": self.model.prefill_s_per_token,
+            "step_s": self.model.step_s,
+        }
+        if active_remaining is not None:
+            out["projected_wait_s"] = self.model.projected_ttft_s(
+                0, len(self._pending), free_slots, active_remaining
+            )
+        return out
 
     def peek(self) -> Optional[Request]:
         return self._pending[0] if self._pending else None

@@ -62,6 +62,7 @@ from typing import Any, Callable, Mapping, Optional, Sequence
 import jax
 
 from repro.core.taps import TapMeta
+from repro.obs.events import emit_event
 from repro.tuner.plan import (
     TUNED_MODES,
     ClipPlan,
@@ -582,18 +583,28 @@ def fleet_agree(
         step_cost_us=None if plan is None else plan_step_cost_us(plan),
         policy=policy_fingerprint,
     )
-    payloads = gather(dict(report.to_payload(), phase="agree"))
-    reports = [RankReport.from_payload(p) for p in payloads]
-    adopted = agree(reports)
-    certify_fleet_hash(
-        adopted, gather_fn=gather_fn, process_index=process_index
-    )
-    verify_adopted(
-        adopted, metas, device=dev, policy_fingerprint=policy_fingerprint
-    )
+    try:
+        payloads = gather(dict(report.to_payload(), phase="agree"))
+        reports = [RankReport.from_payload(p) for p in payloads]
+        adopted = agree(reports)
+        certify_fleet_hash(
+            adopted, gather_fn=gather_fn, process_index=process_index
+        )
+        verify_adopted(
+            adopted, metas, device=dev, policy_fingerprint=policy_fingerprint
+        )
+    except PlanConsensusError as e:
+        emit_event("consensus_rejected", rank_index=idx, device=dev,
+                   reason=str(e))
+        raise
     log.info(
         "fleet agreement: %d rank(s), %d device kind(s), leader process %s, "
         "hash %s", adopted.agreed_ranks, len(adopted.devices),
         adopted.leader_process, adopted.agreed_hash,
     )
+    emit_event("consensus_agreed", rank_index=idx,
+               agreed_hash=adopted.agreed_hash,
+               agreed_ranks=adopted.agreed_ranks,
+               leader_process=adopted.leader_process,
+               devices=sorted(adopted.devices))
     return adopted

@@ -596,3 +596,53 @@ def test_per_host_batch_splits_across_fake_hosts(monkeypatch):
     # the 4 hosts holds a 1/nb slice — the certificate must cover THAT
     monkeypatch.setattr(sh, "axis_size", lambda m, axes: 2)
     assert sh.per_host_batch(256, mesh) == 128  # min(4 hosts, 2 shards)
+
+
+# -------------------------------------------------- consensus obs events --
+def test_fleet_agree_emits_consensus_agreed_event():
+    from repro.obs import set_sink
+    from repro.obs.sinks import MemorySink
+
+    ev = MemorySink()
+    set_sink("events", ev)
+    _, _, _, metas = _setup()
+    fp = shape_fingerprint(metas)
+    dev = device_string()
+    leader_plan = _measured_plan(metas)
+    reports = [
+        RankReport(0, dev, fp, leader_plan.to_json(),
+                   plan_step_cost_us(leader_plan)),
+        RankReport(1, dev, fp, None, None),
+    ]
+    fleet = _fleet_for(reports)
+    adopted = fleet_agree(leader_plan, metas, gather_fn=fleet.gather_for(0),
+                          process_index=0, device=dev)
+    agreed = [r for r in ev.records if r["kind"] == "consensus_agreed"]
+    assert len(agreed) == 1
+    assert agreed[0]["agreed_hash"] == adopted.agreed_hash
+    assert agreed[0]["agreed_ranks"] == 2
+    assert agreed[0]["leader_process"] == 0
+    assert agreed[0]["devices"] == [dev]
+
+
+def test_fleet_agree_emits_consensus_rejected_on_divergence():
+    from repro.obs import set_sink
+    from repro.obs.sinks import MemorySink
+
+    ev = MemorySink()
+    set_sink("events", ev)
+    _, _, _, metas = _setup()
+    dev = device_string()
+    # rank 1 reports a different model fingerprint: the fleet must refuse
+    reports = [
+        RankReport(0, dev, shape_fingerprint(metas), None, None),
+        RankReport(1, dev, "0" * 16, None, None),
+    ]
+    fleet = _fleet_for(reports, adopted_hash="x")
+    with pytest.raises(PlanConsensusError):
+        fleet_agree(None, metas, gather_fn=fleet.gather_for(0),
+                    process_index=0, device=dev)
+    rejected = [r for r in ev.records if r["kind"] == "consensus_rejected"]
+    assert len(rejected) == 1
+    assert rejected[0]["rank_index"] == 0
+    assert "same model" in rejected[0]["reason"]
