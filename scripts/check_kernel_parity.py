@@ -1,0 +1,184 @@
+#!/usr/bin/env python
+"""Kernel-dispatch parity lint (CI docs/lint job, no jax required).
+
+Asserts, by AST inspection only, that the kernel surface stays coherent:
+
+1. ``KERNEL_OPS`` in ``src/repro/tuner/plan.py`` (the tuner/plan view,
+   deliberately duplicated so plan validation stays free of kernel
+   imports) matches ``OPS`` in ``src/repro/kernels/dispatch.py`` — and
+   ``KERNEL_IMPLS`` matches ``IMPLS``.
+2. Every op in ``OPS`` is dispatched somewhere in ``dispatch.py`` with BOTH
+   impls structurally present: an ``if resolve("<op>", ...) == "pallas"``
+   branch that imports/calls a ``*_pallas`` kernel, and a fallback return
+   outside that branch (the XLA path).
+3. Every op has at least one interpret-mode parity test: some
+   ``tests/test_*.py`` mentions the op name and ``interpret`` (the Pallas
+   kernels only run off-TPU through the interpreter, so a parity test that
+   never says ``interpret`` cannot be exercising the Pallas side in CI).
+
+Run:  python scripts/check_kernel_parity.py
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DISPATCH = ROOT / "src" / "repro" / "kernels" / "dispatch.py"
+PLAN = ROOT / "src" / "repro" / "tuner" / "plan.py"
+TESTS = ROOT / "tests"
+
+
+def module_tuple(path: pathlib.Path, name: str) -> tuple:
+    """A module-level ``NAME = ("a", "b", ...)`` literal, by AST."""
+    tree = ast.parse(path.read_text(encoding="utf-8"))
+    for node in tree.body:
+        if (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and node.targets[0].id == name
+        ):
+            return tuple(ast.literal_eval(node.value))
+    raise AssertionError(f"{path}: no module-level tuple {name!r}")
+
+
+def _resolve_op(test: ast.expr):
+    """The op literal in a ``resolve("<op>", ...) == "pallas"`` test, which
+    may be wrapped in a BoolOp (flash_attention adds ``and pallas_ok``)."""
+    for node in ast.walk(test):
+        if not isinstance(node, ast.Compare):
+            continue
+        call = node.left
+        if (
+            isinstance(call, ast.Call)
+            and isinstance(call.func, ast.Name)
+            and call.func.id == "resolve"
+            and call.args
+            and isinstance(call.args[0], ast.Constant)
+            and any(
+                isinstance(c, ast.Constant) and c.value == "pallas"
+                for c in node.comparators
+            )
+        ):
+            return call.args[0].value
+    return None
+
+
+def _mentions_pallas(body: list) -> bool:
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.ImportFrom) and any(
+                alias.name.endswith("_pallas") for alias in node.names
+            ):
+                return True
+            if isinstance(node, ast.Name) and node.id.endswith("_pallas"):
+                return True
+    return False
+
+
+def dispatch_coverage(path: pathlib.Path) -> dict:
+    """op -> {"pallas": bool, "xla": bool} from dispatch.py's structure."""
+    tree = ast.parse(path.read_text(encoding="utf-8"))
+    cov: dict = {}
+    for func in tree.body:
+        if not isinstance(func, ast.FunctionDef):
+            continue
+        for node in ast.walk(func):
+            if not isinstance(node, ast.If):
+                continue
+            op = _resolve_op(node.test)
+            if op is None:
+                continue
+            entry = cov.setdefault(op, {"pallas": False, "xla": False})
+            if _mentions_pallas(node.body):
+                entry["pallas"] = True
+            # the XLA path: a return in the function outside this If's body
+            in_branch = {id(n) for stmt in node.body for n in ast.walk(stmt)}
+            for n in ast.walk(func):
+                if isinstance(n, ast.Return) and id(n) not in in_branch:
+                    entry["xla"] = True
+                    break
+    return cov
+
+
+def parity_test_files(ops) -> dict:
+    """op -> test files mentioning the op AND interpret-mode execution."""
+    hits: dict = {op: [] for op in ops}
+    for path in sorted(TESTS.rglob("test_*.py")):
+        text = path.read_text(encoding="utf-8")
+        if "interpret" not in text:
+            continue
+        for op in ops:
+            if op in text:
+                hits[op].append(path.relative_to(ROOT))
+    return hits
+
+
+def main() -> int:
+    failures = []
+
+    kernel_ops = module_tuple(PLAN, "KERNEL_OPS")
+    dispatch_ops = module_tuple(DISPATCH, "OPS")
+    if kernel_ops != dispatch_ops:
+        failures.append(
+            f"tuner/plan.py KERNEL_OPS {kernel_ops} != kernels/dispatch.py "
+            f"OPS {dispatch_ops}"
+        )
+    kernel_impls = module_tuple(PLAN, "KERNEL_IMPLS")
+    dispatch_impls = module_tuple(DISPATCH, "IMPLS")
+    if kernel_impls != dispatch_impls:
+        failures.append(
+            f"tuner/plan.py KERNEL_IMPLS {kernel_impls} != kernels/"
+            f"dispatch.py IMPLS {dispatch_impls}"
+        )
+
+    cov = dispatch_coverage(DISPATCH)
+    for op in dispatch_ops:
+        entry = cov.get(op)
+        if entry is None:
+            failures.append(
+                f"dispatch.py never dispatches {op!r} "
+                "(no resolve(...) == 'pallas' branch found)"
+            )
+            continue
+        if not entry["pallas"]:
+            failures.append(
+                f"dispatch.py {op!r}: pallas branch imports/calls no "
+                "*_pallas kernel"
+            )
+        if not entry["xla"]:
+            failures.append(
+                f"dispatch.py {op!r}: no XLA fallback return outside the "
+                "pallas branch"
+            )
+    for op in cov:
+        if op not in dispatch_ops:
+            failures.append(
+                f"dispatch.py dispatches unknown op {op!r} (not in OPS)"
+            )
+
+    hits = parity_test_files(dispatch_ops)
+    for op, files in hits.items():
+        if not files:
+            failures.append(
+                f"no interpret-mode parity test references op {op!r} "
+                "(expected some tests/test_*.py mentioning both the op and "
+                "'interpret')"
+            )
+
+    if failures:
+        for f in failures:
+            print(f"check_kernel_parity: FAIL: {f}")
+        return 1
+    print(
+        f"check_kernel_parity: OK — {len(dispatch_ops)} ops, both impls "
+        "dispatched, parity tests present: "
+        + ", ".join(f"{op} ({len(hits[op])} file(s))" for op in dispatch_ops)
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

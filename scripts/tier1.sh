@@ -28,7 +28,21 @@ python -m pytest -x -q --ignore=tests/distributed
 timeout "${DIST_SUITE_TIMEOUT:-600}" python -m pytest -q tests/distributed
 python -m benchmarks.run --fast --only table1,table3,kernels,modes,policies,decode --out-dir "${BENCH_OUT:-.}"
 python scripts/check_docs_links.py
+python scripts/check_kernel_parity.py
 python scripts/policy_smoke.py
+
+# static DP-correctness audit: every shipped config's traced step must be
+# free of sample mixing / uncovered gradient paths (errors fail the gate;
+# the documented MoE routed-scatter waivers surface as info)
+python -m repro.analysis --all-configs
+
+# style gate runs when ruff is available (CI installs it; local dev boxes
+# without it skip rather than fail)
+if command -v ruff >/dev/null 2>&1; then
+  ruff check src scripts
+else
+  echo "# ruff not installed; skipping style gate (CI runs it)" >&2
+fi
 
 # observability smoke: a short instrumented run must leave a readable
 # events/metrics stream with a non-empty epsilon trajectory, and the

@@ -1,0 +1,30 @@
+"""Static DP-correctness auditor + tracing-hygiene lints.
+
+``python -m repro.analysis --all-configs`` sweeps ``configs/registry.py``;
+see docs/ARCHITECTURE.md "Static analysis" for what each pass proves.
+"""
+from repro.analysis.allowlist import ALLOWLIST, AllowlistEntry
+from repro.analysis.audit import audit_arch, audit_loss_fn, audit_step_hygiene
+from repro.analysis.hygiene import donation_lint, jaxpr_hygiene
+from repro.analysis.report import (
+    FINDING_CODES,
+    Finding,
+    counts,
+    render,
+    write_findings,
+)
+
+__all__ = [
+    "ALLOWLIST",
+    "AllowlistEntry",
+    "FINDING_CODES",
+    "Finding",
+    "audit_arch",
+    "audit_loss_fn",
+    "audit_step_hygiene",
+    "counts",
+    "donation_lint",
+    "jaxpr_hygiene",
+    "render",
+    "write_findings",
+]

@@ -1,0 +1,102 @@
+"""CLI: ``python -m repro.analysis [--arch NAME ... | --all-configs]``.
+
+Exit status 1 iff any non-allowlisted ``error`` finding survives — warns
+are reported but never fatal, allowlisted errors are downgraded to info
+with their documented reason attached.  ``--out DIR`` additionally writes
+``findings.jsonl`` (obs-style records, ``repro.obs.sinks`` shapes).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr-level DP-correctness auditor + hygiene lints",
+    )
+    ap.add_argument(
+        "--arch",
+        action="append",
+        default=None,
+        metavar="NAME",
+        help="config to audit (repeatable; fuzzy-matched like launch.train)",
+    )
+    ap.add_argument(
+        "--all-configs",
+        action="store_true",
+        help="sweep every config in configs/registry.py",
+    )
+    ap.add_argument("--batch", type=int, default=3, help="audit batch size")
+    ap.add_argument("--seq", type=int, default=16, help="audit seq length")
+    ap.add_argument(
+        "--full",
+        action="store_true",
+        help="audit full-size configs (default: .reduced())",
+    )
+    ap.add_argument(
+        "--no-hygiene",
+        action="store_true",
+        help="skip the train-step hygiene pass (taint + coverage only)",
+    )
+    ap.add_argument(
+        "--no-allowlist",
+        action="store_true",
+        help="report allowlisted findings at full severity",
+    )
+    ap.add_argument(
+        "--out",
+        default=None,
+        metavar="DIR",
+        help="also write findings.jsonl under DIR",
+    )
+    args = ap.parse_args(argv)
+
+    from repro.analysis.audit import audit_arch
+    from repro.analysis.hygiene import donation_lint
+    from repro.analysis.report import (
+        FINDINGS_FILENAME,
+        counts,
+        render,
+        write_findings,
+    )
+    from repro.configs.registry import ARCHS
+
+    if args.all_configs:
+        names = sorted(ARCHS)
+    elif args.arch:
+        names = args.arch
+    else:
+        ap.error("pass --arch NAME (repeatable) or --all-configs")
+
+    findings = donation_lint()  # arch-independent: once per invocation
+    for name in names:
+        print(f"auditing {name} ...", file=sys.stderr)
+        findings += audit_arch(
+            name,
+            batch=args.batch,
+            seq=args.seq,
+            reduced=not args.full,
+            hygiene_pass=not args.no_hygiene,
+            apply_allowlist=not args.no_allowlist,
+        )
+
+    text = render(findings)
+    if text:
+        print(text)
+    c = counts(findings)
+    print(
+        f"audited {len(names)} config(s): {c['error']} error(s), "
+        f"{c['warn']} warn(s), {c['info']} info"
+    )
+    if args.out:
+        path = pathlib.Path(args.out) / FINDINGS_FILENAME
+        write_findings(findings, path)
+        print(f"findings written to {path}")
+    return 1 if c["error"] else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

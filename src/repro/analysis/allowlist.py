@@ -1,0 +1,99 @@
+"""Per-config waivers for known-mixed structures the auditor must not fail.
+
+Each entry downgrades matching ``error`` findings to ``info`` (they stay in
+the stream, stamped ``allowlisted_by``, so the waiver is always visible).
+Matching is (config glob, finding code, subject glob) via ``fnmatch`` —
+narrow on purpose: an entry is a *documented argument*, not a mute button,
+and ``reason`` is required.
+
+An entry that matches nothing in an audit yields a ``stale_allowlist``
+warning: refactors that remove the waived structure must retire the waiver.
+
+Shipped waivers
+---------------
+MoE expert dispatch (``src/repro/nn/moe.py``) writes tokens into a slot
+table with ``.at[...].set(..., mode="drop")`` at *sample-derived* positions.
+The taint pass proves the writes block-isolated per sample (jax's vmap
+batching dims confine each sample to its own table), but which of a
+sample's tokens survives a capacity collision depends on write order — a
+value-level invariant (the per-sample cumsum occupancy counter makes slots
+unique) that a type-level analysis cannot discharge.  The auditor therefore
+reports ``routed_scatter`` as an error, and the three MoE configs waive it
+here with exactly that argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+
+
+@dataclasses.dataclass(frozen=True)
+class AllowlistEntry:
+    configs: str  # fnmatch glob over config names
+    code: str  # finding code this entry may waive
+    subject: str  # fnmatch glob over finding subjects
+    reason: str
+
+    def matches(self, arch: str, finding) -> bool:
+        return (
+            finding.code == self.code
+            and fnmatch.fnmatch(arch, self.configs)
+            and fnmatch.fnmatch(finding.subject, self.subject)
+        )
+
+
+_MOE_REASON = (
+    "MoE slot-table dispatch: writes are proven block-isolated per sample "
+    "(vmap batching dims), but collision survival under mode='drop' rests on "
+    "the per-sample cumsum occupancy invariant (slots unique within a "
+    "sample), which is value-level and outside the taint lattice; reviewed "
+    "in nn/moe.py"
+)
+
+ALLOWLIST: tuple[AllowlistEntry, ...] = (
+    AllowlistEntry("mixtral-8x7b", "routed_scatter", "*moe.py*", _MOE_REASON),
+    AllowlistEntry("arctic-480b", "routed_scatter", "*moe.py*", _MOE_REASON),
+    AllowlistEntry(
+        "jamba-1.5-large-398b", "routed_scatter", "*moe.py*", _MOE_REASON
+    ),
+)
+
+
+def apply(arch: str, findings, entries=ALLOWLIST):
+    """Downgrade matching errors to info; append stale-entry warnings.
+
+    Returns (findings, used_entries).
+    """
+    from repro.analysis.report import Finding
+
+    used = set()
+    out = []
+    for f in findings:
+        entry = next(
+            (e for e in entries if f.severity == "error" and e.matches(arch, f)),
+            None,
+        )
+        if entry is None:
+            out.append(f)
+        else:
+            used.add(entry)
+            out.append(
+                dataclasses.replace(
+                    f, severity="info", allowlisted_by=entry.reason
+                )
+            )
+    for e in entries:
+        if e not in used and fnmatch.fnmatch(arch, e.configs):
+            out.append(
+                Finding(
+                    code="stale_allowlist",
+                    severity="warn",
+                    arch=arch,
+                    subject=f"{e.code}:{e.subject}",
+                    detail=(
+                        "allowlist entry matched no finding this audit; "
+                        "retire it if the waived structure is gone"
+                    ),
+                )
+            )
+    return out, used

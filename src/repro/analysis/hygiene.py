@@ -1,0 +1,197 @@
+"""Tracing-hygiene lints: f64 promotions, host callbacks, donation misses.
+
+Two kinds of check live here:
+
+* jaxpr walks over the traced train step (``jaxpr_hygiene``): any float64 /
+  complex128 aval means a silent 2x-memory promotion snuck into the jitted
+  program (jax keeps x64 off by default, but ``enable_x64`` scopes and
+  explicit ``astype(float64)`` both get through); any host-callback
+  primitive means a device->host round trip serializing every step.
+* an AST lint over ``src/repro/launch/train.py`` (``donation_lint``): the
+  accumulation-loop jit sites must donate their accumulator/state argument
+  (the PR-7 step-time floor depends on it) — a refactor that drops
+  ``donate_argnums`` doubles peak memory without failing any test.
+
+Everything here is severity ``warn``: hygiene, not privacy.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analysis.report import Finding
+from repro.analysis.taint import ClosedJaxpr, Jaxpr, eqn_summary
+
+_WIDE_DTYPES = ("float64", "complex128")
+_CALLBACK_PRIMS = frozenset(
+    {
+        "pure_callback",
+        "io_callback",
+        "debug_callback",
+        "host_callback_call",
+        "outside_call",
+    }
+)
+
+
+def _walk_jaxprs(jaxpr: Jaxpr):
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for val in eqn.params.values():
+            for sub in _sub_jaxprs(val):
+                yield from _walk_jaxprs(sub)
+
+
+def _sub_jaxprs(val):
+    if isinstance(val, ClosedJaxpr):
+        yield val.jaxpr
+    elif isinstance(val, Jaxpr):
+        yield val
+    elif isinstance(val, (tuple, list)):
+        for item in val:
+            yield from _sub_jaxprs(item)
+
+
+def jaxpr_hygiene(closed: ClosedJaxpr, arch: str = "-") -> list:
+    """Walk every eqn (all sub-jaxprs) for wide dtypes and host callbacks."""
+    findings = []
+    seen_wide = set()
+    for jaxpr in _walk_jaxprs(closed.jaxpr):
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            if prim in _CALLBACK_PRIMS:
+                findings.append(
+                    Finding(
+                        code="host_callback",
+                        severity="warn",
+                        arch=arch,
+                        subject=eqn_summary(eqn),
+                        detail=(
+                            f"host callback primitive {prim!r} inside the "
+                            "jitted step: device->host sync every step"
+                        ),
+                    )
+                )
+            for v in eqn.outvars:
+                dtype = str(getattr(getattr(v, "aval", None), "dtype", ""))
+                if dtype in _WIDE_DTYPES and (prim, dtype) not in seen_wide:
+                    seen_wide.add((prim, dtype))
+                    findings.append(
+                        Finding(
+                            code="f64_promotion",
+                            severity="warn",
+                            arch=arch,
+                            subject=eqn_summary(eqn),
+                            detail=(
+                                f"{dtype} value produced by {prim!r} inside "
+                                "the jitted step (weak-type or explicit "
+                                "promotion; 2x memory + slow on accelerators)"
+                            ),
+                        )
+                    )
+    return findings
+
+
+# launch/train.py jit sites that must donate, and the argument each donates:
+# the train state for the fused step and finalize, the device-resident
+# accumulator for the microstep.  init_fn is deliberately absent — it
+# CONSUMES nothing (builds the zero accumulator from specs).
+EXPECTED_DONATIONS = {
+    "jit_step": 0,
+    "micro_fn": 2,
+    "fin_fn": 0,
+}
+
+
+def donation_lint(repo_root=None, arch: str = "-") -> list:
+    """AST-check the accumulation loop's jit sites for donate_argnums."""
+    root = pathlib.Path(repo_root) if repo_root else _find_root()
+    path = root / "src" / "repro" / "launch" / "train.py"
+    findings = []
+    if not path.exists():
+        findings.append(
+            Finding(
+                code="donation_miss",
+                severity="warn",
+                arch=arch,
+                subject=str(path),
+                detail="launch/train.py not found; donation lint skipped",
+            )
+        )
+        return findings
+    tree = ast.parse(path.read_text(encoding="utf-8"))
+    seen: dict[str, object] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        target = node.targets[0]
+        if not isinstance(target, ast.Name) or target.id not in EXPECTED_DONATIONS:
+            continue
+        call = _peel_jit_call(node.value)
+        if call is None:
+            continue
+        donated: tuple = ()
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                try:
+                    donated = tuple(ast.literal_eval(kw.value))
+                except (ValueError, TypeError):
+                    donated = ("<dynamic>",)
+        seen[target.id] = (node.lineno, donated)
+    for name, argnum in EXPECTED_DONATIONS.items():
+        if name not in seen:
+            findings.append(
+                Finding(
+                    code="donation_miss",
+                    severity="warn",
+                    arch=arch,
+                    subject=f"launch/train.py:{name}",
+                    detail=(
+                        f"expected jit site {name!r} not found; if it was "
+                        "renamed, update analysis.hygiene.EXPECTED_DONATIONS"
+                    ),
+                )
+            )
+            continue
+        lineno, donated = seen[name]
+        if donated == ("<dynamic>",):
+            continue  # computed donate_argnums: assume intentional
+        if argnum not in donated:
+            findings.append(
+                Finding(
+                    code="donation_miss",
+                    severity="warn",
+                    arch=arch,
+                    subject=f"launch/train.py:{lineno}:{name}",
+                    detail=(
+                        f"jit site {name!r} does not donate argument "
+                        f"{argnum}: the accum loop keeps a second copy of "
+                        "the buffer alive (step-time floor regression)"
+                    ),
+                )
+            )
+    return findings
+
+
+def _peel_jit_call(node):
+    """The ``jax.jit(...)`` call inside a ``jit(...).lower(...).compile()``
+    chain (the AOT pattern in launch/train.py), or None."""
+    call = node
+    while isinstance(call, ast.Call):
+        func = call.func
+        if isinstance(func, ast.Attribute) and func.attr in ("lower", "compile"):
+            call = func.value
+            continue
+        break
+    if isinstance(call, ast.Call):
+        func = call.func
+        if (isinstance(func, ast.Attribute) and func.attr == "jit") or (
+            isinstance(func, ast.Name) and func.id == "jit"
+        ):
+            return call
+    return None
+
+
+def _find_root() -> pathlib.Path:
+    # src/repro/analysis/hygiene.py -> repo root is four parents up
+    return pathlib.Path(__file__).resolve().parents[3]

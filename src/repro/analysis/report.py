@@ -1,0 +1,110 @@
+"""Findings: the auditor's structured output records.
+
+Record shape mirrors the ``repro.obs`` streams (one JSON object per line,
+``kind``/severity/payload keys, written through ``repro.obs.sinks.JsonlSink``
+so the append-only/torn-tail semantics and reader tooling carry over), but
+findings are NOT lifecycle events — they go to ``findings.jsonl`` via their
+own sink, never through the closed ``EVENT_KINDS`` taxonomy.
+
+Severity tiers:
+- ``error``  privacy violation — sample mixing at a tap, an uncovered or
+             bypassed gradient path, unprovable routed writes.  Fails the
+             CLI (exit 1) and therefore CI.
+- ``warn``   tracing hygiene — f64 promotions, host callbacks, donation
+             misses, dead params.  Reported, never fatal.
+- ``info``   allowlisted errors (documented known-mixed structures) and
+             notes; kept in the stream so a waiver is still visible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.obs.sinks import JsonlSink
+
+SEVERITIES = ("error", "warn", "info")
+
+# closed finding taxonomy, mirroring obs.events.EVENT_KINDS discipline
+FINDING_CODES = (
+    "sample_mixing",      # tap/act/loss value is sample-mixed (taint pass)
+    "batch_axis_moved",   # taint survived but on the wrong axis for the tap
+    "routed_scatter",     # data-dependent scatter writes (MoE slot tables)
+    "unknown_primitive",  # conservative taint fallback fired (rule gap)
+    "uncovered_param",    # trainable leaf reaches the loss with no tap
+    "tap_bypass",         # claimed leaf has a gradient route around its tap
+    "dead_param",         # leaf never reaches the loss (unclipped but inert)
+    "tap_unthreaded",     # declared tap has no add eqn in the graph
+    "f64_promotion",      # float64/complex128 value inside the jitted step
+    "host_callback",      # host callback primitive inside the jitted step
+    "donation_miss",      # jit site in the accum loop without donate_argnums
+    "stale_allowlist",    # allowlist entry matched nothing this audit
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str
+    severity: str  # "error" | "warn" | "info"
+    arch: str  # config name, or "-" for arch-independent lints
+    subject: str  # tap name, param path, or eqn locator
+    detail: str
+    provenance: tuple[str, ...] = ()  # eqn-level trail (taint pass)
+    allowlisted_by: Optional[str] = None
+
+    def __post_init__(self):
+        if self.code not in FINDING_CODES:
+            raise ValueError(
+                f"unknown finding code {self.code!r}; add it to "
+                "repro.analysis.report.FINDING_CODES"
+            )
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}")
+
+    def to_record(self) -> dict:
+        rec = {
+            "kind": "finding",
+            "code": self.code,
+            "severity": self.severity,
+            "arch": self.arch,
+            "subject": self.subject,
+            "detail": self.detail,
+        }
+        if self.provenance:
+            rec["provenance"] = list(self.provenance)
+        if self.allowlisted_by is not None:
+            rec["allowlisted_by"] = self.allowlisted_by
+        return rec
+
+
+FINDINGS_FILENAME = "findings.jsonl"
+
+
+def write_findings(findings, path) -> None:
+    """Append findings as JSONL through the obs sink (torn-tail-safe)."""
+    sink = JsonlSink(path)
+    try:
+        for f in findings:
+            sink.emit(f.to_record())
+    finally:
+        sink.close()
+
+
+def render(findings) -> str:
+    """Human summary: one line per finding, provenance indented under it."""
+    lines = []
+    for f in findings:
+        waiver = f" [allowlisted: {f.allowlisted_by}]" if f.allowlisted_by else ""
+        lines.append(
+            f"{f.severity.upper():5s} {f.code:18s} {f.arch}: {f.subject} — "
+            f"{f.detail}{waiver}"
+        )
+        for hop in f.provenance:
+            lines.append(f"        ↳ {hop}")
+    return "\n".join(lines)
+
+
+def counts(findings) -> dict:
+    out = {s: 0 for s in SEVERITIES}
+    for f in findings:
+        out[f.severity] += 1
+    return out

@@ -643,5 +643,5 @@ def dp_value_and_clipped_grad(
     try:
         executor_cls = _EXECUTORS[cfg.mode]
     except KeyError:
-        raise ValueError(f"unknown clipping mode {cfg.mode!r}; have {MODES}")
+        raise ValueError(f"unknown clipping mode {cfg.mode!r}; have {MODES}") from None
     return executor_cls(loss_with_ctx, cfg)

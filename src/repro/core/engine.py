@@ -22,7 +22,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.accountant import RDPAccountant, compute_epsilon, find_noise_multiplier
-from repro.core.clipping import ClipConfig, dp_value_and_clipped_grad, discover_meta, validate_coverage
+from repro.core.clipping import (
+    ClipConfig,
+    discover_meta,
+    dp_value_and_clipped_grad,
+    validate_coverage,
+)
 from repro.core.noise import add_dp_noise
 from repro.utils.logging import get_logger
 
@@ -416,6 +421,44 @@ class PrivacyEngine:
             )
             for rs in self._release_sigmas():
                 self.accountant.step(q=self.sampling_rate, sigma=rs, steps=1)
+
+    def check_epsilon_alarm(
+        self, fraction: float, step: Optional[int] = None
+    ) -> bool:
+        """One-shot budget alarm: emit ``epsilon_budget_crossed`` once the
+        accountant's spend passes ``fraction * target_epsilon``.
+
+        Returns True iff the alarm fired on THIS call — the latch guarantees
+        at most one event per engine, so drivers may call this after every
+        ``record_step`` without flooding the stream.  A no-op when the run
+        has no ``target_epsilon`` (noise-multiplier-specified runs) or
+        ``fraction <= 0``.
+        """
+        if (
+            getattr(self, "_eps_alarm_fired", False)
+            or self.target_epsilon is None
+            or fraction <= 0
+        ):
+            return False
+        eps, delta = self.privacy_spent()
+        if eps < fraction * self.target_epsilon:
+            return False
+        self._eps_alarm_fired = True
+        from repro.obs import events as obs
+
+        obs.emit_event(
+            "epsilon_budget_crossed",
+            step=step,
+            epsilon=float(eps),
+            delta=float(delta),
+            target_epsilon=float(self.target_epsilon),
+            fraction=float(fraction),
+        )
+        log.warning(
+            "privacy budget alarm: epsilon %.4f passed %.0f%% of target %.4f",
+            eps, 100 * fraction, self.target_epsilon,
+        )
+        return True
 
     def privacy_spent(self, steps: Optional[int] = None) -> tuple[float, float]:
         if steps is not None:

@@ -31,4 +31,6 @@ def get_clip_fn(name: str):
     try:
         return CLIP_FUNCTIONS[name]
     except KeyError:
-        raise ValueError(f"unknown clip function {name!r}; have {list(CLIP_FUNCTIONS)}")
+        raise ValueError(
+            f"unknown clip function {name!r}; have {list(CLIP_FUNCTIONS)}"
+        ) from None

@@ -96,6 +96,16 @@ class TapMeta:
             out *= s
         return out
 
+    @property
+    def batch_axis(self) -> int:
+        """Axis of ``s_shape``/``a_shape`` carrying the batch dimension.
+
+        0 for plain taps; ScannedStack prepends one stack dim per level, so
+        stacked taps carry the batch right after them.  The static auditor
+        (``repro.analysis``) uses this to locate each tap's sample axis in
+        the traced jaxpr."""
+        return len(self.stack_dims)
+
 
 @dataclasses.dataclass(frozen=True)
 class ClipRuntime:

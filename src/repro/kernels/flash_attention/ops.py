@@ -12,7 +12,6 @@ Supports GQA (H query heads over K kv heads), causal masking, sliding windows
 from __future__ import annotations
 
 import functools
-import math
 from typing import Optional
 
 import jax

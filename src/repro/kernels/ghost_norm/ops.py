@@ -17,7 +17,6 @@ Calling these functions directly always runs the XLA path.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -13,9 +13,7 @@ ring-algorithm factors with the participant count parsed from replica_groups.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Any, Optional
 
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # bytes/s / chip

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.decision import decide

@@ -11,7 +11,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
 
@@ -26,12 +25,16 @@ def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig, batch: int) -> dict:
     specs: dict[str, jax.ShapeDtypeStruct] = {}
     i32 = jnp.int32
     if cfg.family == "audio":
-        specs["frames"] = jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
         specs["tokens"] = jax.ShapeDtypeStruct((batch, s), i32)
         specs["labels"] = jax.ShapeDtypeStruct((batch, s), i32)
     elif cfg.family == "vlm":
         text = s - cfg.prefix_tokens
-        specs["prefix"] = jax.ShapeDtypeStruct((batch, cfg.prefix_tokens, cfg.prefix_dim), jnp.dtype(cfg.dtype))
+        specs["prefix"] = jax.ShapeDtypeStruct(
+            (batch, cfg.prefix_tokens, cfg.prefix_dim), jnp.dtype(cfg.dtype)
+        )
         specs["tokens"] = jax.ShapeDtypeStruct((batch, text), i32)
         specs["labels"] = jax.ShapeDtypeStruct((batch, text), i32)
     else:
@@ -46,10 +49,14 @@ def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig, batch: int) -> dict
     i32 = jnp.int32
     specs: dict[str, jax.ShapeDtypeStruct] = {}
     if cfg.family == "audio":
-        specs["frames"] = jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
         specs["tokens"] = jax.ShapeDtypeStruct((batch, s), i32)
     elif cfg.family == "vlm":
-        specs["prefix"] = jax.ShapeDtypeStruct((batch, cfg.prefix_tokens, cfg.prefix_dim), jnp.dtype(cfg.dtype))
+        specs["prefix"] = jax.ShapeDtypeStruct(
+            (batch, cfg.prefix_tokens, cfg.prefix_dim), jnp.dtype(cfg.dtype)
+        )
         specs["tokens"] = jax.ShapeDtypeStruct((batch, s - cfg.prefix_tokens), i32)
     else:
         specs["tokens"] = jax.ShapeDtypeStruct((batch, s), i32)

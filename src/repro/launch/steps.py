@@ -12,7 +12,6 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.clipping import ClipConfig, _batch_mask, dp_value_and_clipped_grad
 from repro.core.noise import add_dp_noise
 from repro.optim.optimizers import Optimizer, apply_updates

@@ -101,6 +101,10 @@ def parse_args(argv=None):
                          "prefixes, one threshold per group (a catch-all "
                          "group is added automatically)")
     ap.add_argument("--target-epsilon", type=float, default=None)
+    ap.add_argument("--epsilon-alarm-frac", type=float, default=0.9,
+                    help="emit a one-shot epsilon_budget_crossed event when "
+                         "the accountant passes this fraction of "
+                         "--target-epsilon (<=0 disables)")
     ap.add_argument("--noise-multiplier", type=float, default=1.0)
     ap.add_argument("--sample-size", type=int, default=50000)
     ap.add_argument("--poisson", action="store_true",
@@ -591,6 +595,7 @@ def run_once(args, injection: Optional[InjectionPlan] = None) -> int:
                 # second block_until_ready (test-asserted)
                 jax.block_until_ready((state["step"], metrics))
             engine.record_step()
+            engine.check_epsilon_alarm(args.epsilon_alarm_frac, step=step_idx + 1)
             dt = watchdog.end_step(step_idx)
             step = step_idx + 1
             if profile is not None:

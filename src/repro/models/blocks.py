@@ -13,7 +13,7 @@ from repro.nn.mamba import MambaBlock
 from repro.nn.mlp import MLP, GatedMLP
 from repro.nn.module import LayerNorm, Module, Params, AxesTree, RMSNorm
 from repro.nn.moe import MoE
-from repro.nn.stack import ScannedStack, SequentialBlocks
+from repro.nn.stack import SequentialBlocks
 from repro.nn.xlstm import MLSTMBlock, SLSTMBlock
 
 

@@ -7,7 +7,7 @@ Exposes the three entry points the launcher lowers:
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

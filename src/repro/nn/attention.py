@@ -7,7 +7,6 @@ The score computation routes through the blocked flash implementation
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
 import jax
@@ -191,8 +190,10 @@ class Attention(Module):
                 new_cache = cache
             else:
                 skv = kv_src.shape[1]
-                k = self.wk(params["k"], kv_src, ctx.scope("k")).reshape(b, skv, self.n_kv, self.head_dim)
-                v = self.wv(params["v"], kv_src, ctx.scope("v")).reshape(b, skv, self.n_kv, self.head_dim)
+                k = self.wk(params["k"], kv_src, ctx.scope("k"))
+                k = k.reshape(b, skv, self.n_kv, self.head_dim)
+                v = self.wv(params["v"], kv_src, ctx.scope("v"))
+                v = v.reshape(b, skv, self.n_kv, self.head_dim)
                 new_cache = {"k": k, "v": v} if cache is not None else None
             # serving (cache present) traces through kernel dispatch; the
             # training path needs the custom-VJP XLA op directly

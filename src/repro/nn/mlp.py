@@ -75,4 +75,5 @@ class MLP(Module):
         return {"wi": self.wi.axes(), "wo": self.wo.axes()}
 
     def __call__(self, params: Params, x: jax.Array, ctx: Ctx) -> jax.Array:
-        return self.wo(params["wo"], jax.nn.gelu(self.wi(params["wi"], x, ctx.scope("wi"))), ctx.scope("wo"))
+        h = jax.nn.gelu(self.wi(params["wi"], x, ctx.scope("wi")))
+        return self.wo(params["wo"], h, ctx.scope("wo"))

@@ -13,7 +13,7 @@ directly.  Logical axis names are resolved to mesh axes by
 from __future__ import annotations
 
 import math
-from typing import Any, Optional, Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp

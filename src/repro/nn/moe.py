@@ -21,7 +21,6 @@ inside each expert (resolved by ``repro.parallel.sharding``).
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

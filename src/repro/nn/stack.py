@@ -13,7 +13,7 @@ period gives interleaved architectures with one compiled block body.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -113,7 +113,9 @@ class ScannedStack(Module):
             y, c = self.block(p_i, x_i, cctx, cache=cache_i, **kw)
             return y, c
 
-        p_spec = jax.tree_util.tree_map(lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), params)
+        p_spec = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), params
+        )
         x_spec = jax.ShapeDtypeStruct(x.shape, x.dtype)
         c_spec = None
         if cache is not None:

@@ -297,7 +297,8 @@ class SLSTMBlock(Module):
         y = jnp.concatenate([h_prev[:, 1:], h_last[:, None]], axis=1)
         y = self.out_norm(params["out_norm"], y, ctx.scope("out_norm"))
         x = res + y
-        x = x + self.ffn(params["ffn"], self.ffn_norm(params["ffn_norm"], x, ctx.scope("ffn_norm")), ctx.scope("ffn"))
+        h = self.ffn_norm(params["ffn_norm"], x, ctx.scope("ffn_norm"))
+        x = x + self.ffn(params["ffn"], h, ctx.scope("ffn"))
 
         new_cache = None
         if cache is not None:

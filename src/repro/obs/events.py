@@ -52,6 +52,8 @@ EVENT_KINDS = (
     "request_shed",       # serving admission: projected TTFT blew the SLO
     "profile_started",    # jax.profiler trace window opened
     "profile_stopped",    # trace window closed (trace_dir recorded)
+    "epsilon_budget_crossed",  # accountant passed the configured fraction of
+    #                       the target epsilon (one-shot per run)
     "run_finished",       # launcher exit: final step + privacy spend
 )
 

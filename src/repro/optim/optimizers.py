@@ -11,7 +11,7 @@ the mechanism lives entirely in the gradient, as in the paper.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -17,11 +17,9 @@ head counts (whisper's 20) and vocab sizes (51866) stay correct.
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig

@@ -48,7 +48,9 @@ def make_policy(name: str, **kwargs: Any) -> ClipPolicy:
     try:
         cls = POLICIES[name]
     except KeyError:
-        raise ValueError(f"unknown clip policy {name!r}; have {sorted(POLICIES)}")
+        raise ValueError(
+            f"unknown clip policy {name!r}; have {sorted(POLICIES)}"
+        ) from None
     accepted = set(inspect.signature(cls.__init__).parameters) - {"self"}
     return cls(**{k: v for k, v in kwargs.items() if k in accepted})
 

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import gc
 import os
-from typing import Any, Callable, Mapping, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -421,3 +421,61 @@ def test_rank_prefix_needs_no_jax_import(monkeypatch):
     monkeypatch.setitem(sys.modules, "jax", None)
     monkeypatch.delitem(sys.modules, "jax")
     assert _rank_prefix() == ""
+
+
+# -- epsilon budget alarm ---------------------------------------------------
+def test_epsilon_alarm_fires_once_and_is_latched():
+    from repro.core.engine import PrivacyEngine
+
+    ev, _ = _mem_sinks()
+    try:
+        engine = PrivacyEngine(
+            loss_with_ctx=lambda p, b, c: None,
+            batch_size=10,
+            sample_size=100,
+            max_grad_norm=1.0,
+            steps=20,
+            target_epsilon=2.0,
+        )
+        assert not engine.check_epsilon_alarm(0.5, step=0)  # nothing spent yet
+        fired = []
+        for i in range(engine.steps):
+            engine.record_step()
+            fired.append(engine.check_epsilon_alarm(0.5, step=i + 1))
+        # the sigma bisection lands end-of-run spend at ~target, so the 50%
+        # alarm crosses strictly inside the run — and the latch keeps the
+        # event one-shot even though we check after every step
+        assert sum(fired) == 1
+        assert fired.index(True) < engine.steps - 1
+        crossed = [r for r in ev.records if r["kind"] == "epsilon_budget_crossed"]
+        assert len(crossed) == 1
+        rec = crossed[0]
+        assert rec["step"] == fired.index(True) + 1
+        assert rec["fraction"] == 0.5
+        assert rec["target_epsilon"] == 2.0
+        assert rec["epsilon"] >= 0.5 * rec["target_epsilon"]
+        assert rec["delta"] == engine.target_delta
+    finally:
+        reset_sinks()
+
+
+def test_epsilon_alarm_disabled_paths():
+    from repro.core.engine import PrivacyEngine
+
+    ev, _ = _mem_sinks()
+    try:
+        engine = PrivacyEngine(
+            loss_with_ctx=lambda p, b, c: None,
+            batch_size=10,
+            sample_size=100,
+            max_grad_norm=1.0,
+            steps=5,
+            noise_multiplier=0.4,  # no target_epsilon: alarm is a no-op
+        )
+        engine.record_step(5)
+        assert not engine.check_epsilon_alarm(0.5)
+        engine.target_epsilon = 0.01  # would fire, but frac<=0 disables
+        assert not engine.check_epsilon_alarm(0.0)
+        assert ev.records == []
+    finally:
+        reset_sinks()
